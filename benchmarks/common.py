@@ -1,0 +1,19 @@
+"""Shared benchmark helpers: timing + CSV row emission."""
+from __future__ import annotations
+
+import time
+
+
+def timeit(fn, *, repeats: int = 3, warmup: int = 1):
+    for _ in range(warmup):
+        fn()
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def row(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,23 @@
+"""Appendix A: durability / availability derivations (the paper's tables)."""
+from __future__ import annotations
+
+from benchmarks.common import row
+from repro.core import durability as D
+
+
+def run():
+    p = D.DurabilityParams()  # the (10,6) worked example
+    row("durability/p_data_loss", 0.0, f"{D.p_data_loss(p):.3e}(paper:3.01e-12)")
+    row("durability/nines", 0.0, f"{D.durability_nines(p):.1f}")
+    row("durability/p_unavailable", 0.0, f"{D.p_unavailable(p):.3e}(paper:1.35e-4)")
+    row("durability/availability", 0.0, f"{D.availability(p):.6f}(paper:0.999865)")
+    for m in (4, 6, 8):
+        q = D.DurabilityParams(m=m)
+        row(f"durability/sweep_m{m}", 0.0, f"loss={D.p_data_loss(q):.2e}")
+    for mttd in (1.0, 24.0, 168.0):
+        q = D.DurabilityParams(mttd_hours=mttd)
+        row(f"durability/sweep_mttd{int(mttd)}h", 0.0, f"loss={D.p_data_loss(q):.2e}")
+
+
+if __name__ == "__main__":
+    run()

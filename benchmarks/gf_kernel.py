@@ -1,0 +1,46 @@
+"""§3.5 "Erasure coding acceleration": the GF(2^8) matmul kernel.
+
+On this CPU container the Pallas kernel runs in interpret mode (correctness,
+not speed), so the table reports (a) the numpy-path CPU throughput that the
+storage stack actually achieves here and (b) the kernel's *derived* TPU
+roofline: 8*K vector int-ops per byte of B on the VPU, bandwidth-bound below
+~K=4 — mirroring the paper's claim that vectorized GF coding outruns NIC
+line rate.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro.core import gf
+from repro.kernels import ops
+
+# v5e VPU: 4 MXU-independent vector units, ~1e12 int32 op/s effective (est.)
+VPU_INT_OPS = 1.0e12
+HBM_BW = 819e9
+
+
+def run():
+    rng = np.random.default_rng(0)
+    for k, n in [(10, 1 << 20), (16, 1 << 20)]:
+        a = rng.integers(0, 256, (6, k), dtype=np.uint8)
+        b = rng.integers(0, 256, (k, n), dtype=np.uint8)
+        t_np = timeit(lambda: gf.matmul_np(a, b), repeats=2)
+        row(f"gf_kernel/numpy_k{k}_1MiB", t_np * 1e6, f"{n / 1e6 / t_np:.0f}MB/s_cpu")
+        # TPU roofline for the same op
+        ops_needed = 8 * k * n  # unrolled clmul steps per output row set
+        t_compute = ops_needed / VPU_INT_OPS
+        t_mem = (n * k + 6 * n) / HBM_BW
+        bound = "compute" if t_compute > t_mem else "memory"
+        row(f"gf_kernel/tpu_roofline_k{k}", 0.0,
+            f"{n / max(t_compute, t_mem) / 1e9:.1f}GB/s_derived;{bound}-bound")
+    # correctness spot-check of the kernel on a big tile
+    a = rng.integers(0, 256, (6, 10), dtype=np.uint8)
+    b = rng.integers(0, 256, (10, 65536), dtype=np.uint8)
+    t_kern = timeit(lambda: np.asarray(ops.gf_matmul(a, b)), repeats=1, warmup=1)
+    ok = np.array_equal(np.asarray(ops.gf_matmul(a, b)), gf.matmul_np(a, b))
+    row("gf_kernel/pallas_interpret_64KiB", t_kern * 1e6, f"allclose={ok}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,31 @@
+"""§5.4 "Reality Based Incentives": every calibration bound as a number."""
+from __future__ import annotations
+
+from benchmarks.common import row
+from repro.core import economics as E
+
+
+def run():
+    cm = E.CostModel()  # AWS S3 numbers from the paper
+    p_a = E.min_audit_probability(cm)
+    row("incentives/min_pa_per_day", 0.0, f"{p_a:.4f}(paper:0.0076)")
+    row("incentives/audit_every_days", 0.0, f"{1 / p_a:.0f}(paper:~130)")
+
+    for pf in (0.05, 0.1, 0.25):
+        row(f"incentives/P_Sa_fake{int(pf * 100)}", 0.0,
+            f"{E.detection_probability(pf, 50):.3f}")
+
+    s_ata = E.min_ata_slashing(rwd_au=0.01, p_ata=0.02, eps=0.01)
+    row("incentives/min_S_ata", 0.0, f"{s_ata:.0f}(rwd_au=0.01,p_ata=0.02,eps=0.01)")
+
+    s_a = E.fake_storage_slashing_bound(p_a=0.05, rwd_st=1.0, prct_fake=0.1,
+                                        total_committed=10_000, C=50)
+    row("incentives/min_S_a_fake10pct_10k", 0.0, f"{s_a:.0f}")
+
+    n_a = E.audits_per_gb_month(0.05, 1024, 4, 30)
+    rwd_st = E.fee_split(W=0.023, n_a=n_a, rwd_au=1e-9)
+    row("incentives/fee_split_rwd_st", 0.0, f"{rwd_st:.6f}$/GB/mo_of_W=0.023")
+
+
+if __name__ == "__main__":
+    run()

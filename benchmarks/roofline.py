@@ -1,0 +1,104 @@
+"""§Roofline: three-term roofline per (arch x shape) from the dry-run.
+
+    compute    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+    memory     = HLO_bytes_per_device / HBM_bandwidth
+    collective = collective_wire_bytes_per_device / ICI_bandwidth
+
+(the post-SPMD HLO is a per-device program, so per-device numbers divided
+by per-chip rates equal the brief's global/(chips*rate) formulation).
+
+MODEL_FLOPS = 6*N*D for training (fwd+bwd), 2*N*D for inference, with
+N = active parameters (MoE: routed top-k + shared only).  The ratio
+MODEL_FLOPS / (HLO_FLOPs * chips) exposes remat/redundancy waste.
+
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from benchmarks.common import row
+from repro.configs import ALL_ARCHS, get
+from repro.configs.base import SHAPES
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+RESULTS = pathlib.Path(__file__).resolve().parent.parent / "results" / "dryrun"
+
+
+def model_flops(arch: str, shape) -> float:
+    cfg = get(arch)
+    n_active = cfg.active_param_count()
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    per_token = 6 * n_active if shape.kind == "train" else 2 * n_active
+    return per_token * tokens
+
+
+def load_cells(mesh: str = "single") -> list[dict]:
+    cells = []
+    for arch in ALL_ARCHS:
+        for shape in SHAPES:
+            p = RESULTS / f"{arch}__{shape.name}__{mesh}.json"
+            if not p.exists():
+                continue
+            r = json.loads(p.read_text())
+            if r["status"] != "ok":
+                continue
+            r["_shape"] = shape
+            cells.append(r)
+    return cells
+
+
+def roofline_terms(rec: dict) -> dict:
+    shape = rec["_shape"]
+    chips = rec["devices"]
+    t_comp = rec["hlo_flops"] / PEAK_FLOPS
+    t_mem = rec["hlo_bytes"] / HBM_BW
+    t_coll = rec.get("collective_wire_bytes", 0.0) / ICI_BW
+    dominant = max((t_comp, "compute"), (t_mem, "memory"), (t_coll, "collective"))[1]
+    mf = model_flops(rec["arch"], shape)
+    useful = mf / max(rec["hlo_flops"] * chips, 1.0)
+    # roofline fraction: useful-compute time over the dominated step time
+    t_step = max(t_comp, t_mem, t_coll)
+    frac = (mf / chips / PEAK_FLOPS) / t_step if t_step > 0 else 0.0
+    return {
+        "compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll,
+        "dominant": dominant, "model_flops": mf, "useful_ratio": useful,
+        "roofline_frac": frac,
+    }
+
+
+SUGGEST = {
+    "compute": "reduce recompute (remat policy) / fuse attention to cut non-model FLOPs",
+    "memory": "raise arithmetic intensity: larger per-step tiles, bf16 intermediates, fewer fusion-boundary round-trips",
+    "collective": "reshard to cut per-layer all-reduce volume (bf16 reductions, 2D sharding, overlap with compute)",
+}
+
+
+def run(mesh: str = "single", csv_out: str | None = "results/roofline.csv"):
+    cells = load_cells(mesh)
+    lines = ["arch,shape,chips,compute_s,memory_s,collective_s,dominant,"
+             "model_flops,hlo_flops_dev,useful_ratio,roofline_frac"]
+    for rec in cells:
+        t = roofline_terms(rec)
+        name = f"roofline/{rec['arch']}/{rec['shape']}"
+        row(name, t[t["dominant"] + "_s"] * 1e6,
+            f"dom={t['dominant']};frac={t['roofline_frac']:.3f};useful={t['useful_ratio']:.2f}")
+        lines.append(
+            f"{rec['arch']},{rec['shape']},{rec['devices']},{t['compute_s']:.4e},"
+            f"{t['memory_s']:.4e},{t['collective_s']:.4e},{t['dominant']},"
+            f"{t['model_flops']:.3e},{rec['hlo_flops']:.3e},{t['useful_ratio']:.3f},"
+            f"{t['roofline_frac']:.4f}"
+        )
+    if csv_out:
+        p = pathlib.Path(csv_out)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text("\n".join(lines) + "\n")
+    return cells
+
+
+if __name__ == "__main__":
+    run()

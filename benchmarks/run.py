@@ -1,0 +1,38 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run roofline   # one suite
+"""
+from __future__ import annotations
+
+import sys
+
+SUITES = [
+    "replication_overhead",  # Table 1
+    "repair_bandwidth",  # §3.3 Clay vs RS
+    "write_path",  # Figure 2
+    "read_throughput",  # §1 4K-streaming bar
+    "audit_detection",  # §4 / §5.4(3)
+    "incentives",  # §5.4 calibration table
+    "durability_bench",  # Appendix A
+    "gf_kernel",  # §3.5 erasure-coding acceleration
+    "roofline",  # dry-run roofline (EXPERIMENTS §Roofline)
+]
+
+
+def main() -> None:
+    wanted = sys.argv[1:] or SUITES
+    print("name,us_per_call,derived")
+    for name in wanted:
+        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+        try:
+            mod.run()
+        except Exception as e:  # keep the harness going; report the failure
+            print(f"{name}/FAILED,0.0,{type(e).__name__}:{e}")
+            raise
+
+
+if __name__ == "__main__":
+    main()

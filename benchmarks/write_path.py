@@ -1,0 +1,36 @@
+"""Figure 2: client-SDK data preparation (partition -> encode -> commit).
+
+Per-stage wall time + MB/s on one chunkset, numpy GF path vs the Pallas
+kernel path (interpret mode on CPU; the kernel's TPU roofline is derived in
+benchmarks/gf_kernel.py).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import row, timeit
+from repro.core import commitments as cm
+from repro.storage.blob import BlobLayout
+
+
+def run():
+    layout = BlobLayout(k=10, m=6, chunkset_bytes_target=1024 * 1024)
+    rng = np.random.default_rng(0)
+    data = rng.integers(0, 256, layout.chunkset_bytes, dtype=np.uint8).tobytes()
+    mb = len(data) / 1e6
+
+    t_part = timeit(lambda: layout.partition(data), repeats=3)
+    chunksets = layout.partition(data)
+    t_enc = timeit(lambda: layout.code.encode(chunksets[0]), repeats=2)
+    coded = layout.code.encode(chunksets[0])
+    t_commit = timeit(lambda: [cm.commit_chunk(coded[i]) for i in range(layout.n)], repeats=2)
+
+    row("write_path/partition", t_part * 1e6, f"{mb / t_part:.0f}MB/s")
+    row("write_path/clay_encode", t_enc * 1e6, f"{mb / t_enc:.1f}MB/s")
+    row("write_path/merkle_commit", t_commit * 1e6, f"{mb / t_commit:.1f}MB/s")
+    total = t_part + t_enc + t_commit
+    row("write_path/total_prepare", total * 1e6, f"{mb / total:.1f}MB/s_1cpu")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,28 @@
+"""The paper's own system configuration (not an LM arch): the production
+Shelby deployment parameters used across benchmarks and examples."""
+import dataclasses
+
+from repro.core.audit import AuditParams
+from repro.storage.blob import BlobLayout
+
+
+@dataclasses.dataclass(frozen=True)
+class ShelbyConfig:
+    layout: BlobLayout = BlobLayout(k=10, m=6, chunkset_bytes_target=10 * 1024 * 1024)
+    audit: AuditParams = AuditParams()
+    num_sps: int = 24
+    num_dcs: int = 5  # Appendix A availability model
+    racks_per_dc: int = 4
+    rpc_hedge: int = 2
+    price_per_chunk_read: float = 1e-6
+    storage_fee_per_gb_month: float = 0.023  # W, benchmarked against S3
+    epochs_per_month: float = 30.0
+
+
+CONFIG = ShelbyConfig()
+SMOKE = ShelbyConfig(
+    layout=BlobLayout(k=4, m=2, chunkset_bytes_target=64 * 1024),
+    num_sps=8,
+    num_dcs=3,
+    racks_per_dc=2,
+)

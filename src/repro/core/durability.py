@@ -1,0 +1,86 @@
+"""Durability & availability closed forms (paper Appendix A).
+
+Reproduces the paper's worked example exactly:
+
+    P(data loss) ~= (16 * 0.50) * C(15,6) * (0.50 * (24+12)/8760)^6
+                 ~= 3.01e-12                    (11+ nines durability)
+
+    P(unavail)   ~= P(loss) + 30/525600 + P(<3 of 5 DCs online)
+                 ~= 1.35e-4                     (~3 nines availability)
+
+plus general-form functions used by the repair planner and the SP failure
+injector (drive/host/rack/DC failure rates from the appendix).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+HOURS_PER_YEAR = 8760
+MINUTES_PER_YEAR = 525_600
+
+
+@dataclasses.dataclass(frozen=True)
+class FailureModel:
+    """Appendix-A hardware failure assumptions."""
+
+    drive_afr: float = 0.02  # 2 %/yr
+    latent_sector_lifetime: float = 0.0345  # 3.45 % of drives, lifetime
+    host_afr: float = 0.03  # 1-5 %/yr
+    rack_afr: float = 0.05  # availability only
+    dc_afr: float = 0.02  # availability only
+    systemic_events_per_year: float = 1.0
+    systemic_mttr_minutes: float = 30.0
+
+
+@dataclasses.dataclass(frozen=True)
+class DurabilityParams:
+    """The appendix's worked example for a (10, 6) code."""
+
+    k: int = 10
+    m: int = 6
+    chunk_loss_prob: float = 0.50  # "nodes have a (very high) 50% likelihood"
+    mttd_hours: float = 24.0
+    mttr_hours: float = 12.0
+
+    @property
+    def n(self) -> int:
+        return self.k + self.m
+
+
+def p_data_loss(p: DurabilityParams) -> float:
+    """Appendix A: first trigger * P(m more of remaining n-1 inside T_crit)."""
+    t_crit = (p.mttd_hours + p.mttr_hours) / HOURS_PER_YEAR
+    per_node = p.chunk_loss_prob * t_crit
+    trigger = p.n * p.chunk_loss_prob
+    return trigger * math.comb(p.n - 1, p.m) * per_node**p.m
+
+
+def durability_nines(p: DurabilityParams) -> float:
+    return -math.log10(p_data_loss(p))
+
+
+def p_fewer_than_k_dcs(num_dcs: int = 5, dc_uptime: float = 0.98, need: int = 3) -> float:
+    """P(< `need` of `num_dcs` online), iid uptime."""
+    p_ok = 0.0
+    for up in range(need, num_dcs + 1):
+        p_ok += math.comb(num_dcs, up) * dc_uptime**up * (1 - dc_uptime) ** (num_dcs - up)
+    return 1.0 - p_ok
+
+
+def p_unavailable(
+    p: DurabilityParams,
+    num_dcs: int = 5,
+    dc_uptime: float = 0.98,
+    need_dcs: int = 3,
+    systemic_minutes: float = 30.0,
+) -> float:
+    return (
+        p_data_loss(p)
+        + systemic_minutes / MINUTES_PER_YEAR
+        + p_fewer_than_k_dcs(num_dcs, dc_uptime, need_dcs)
+    )
+
+
+def availability(p: DurabilityParams, **kw) -> float:
+    return 1.0 - p_unavailable(p, **kw)

@@ -1,0 +1,89 @@
+"""Blob-backed training-data pipeline (§6 "AI and Data Marketplaces").
+
+Token corpora live in Shelby as blobs of little-endian int32 token ids; the
+pipeline is a *paying read client*: every batch is a verified byte-range
+read through an RPC node (hedged k-of-n fetches under the hood, so a slow or
+dead SP never stalls the input pipeline — the paper's request-hedging as
+straggler mitigation).
+
+A background prefetch thread keeps `prefetch` batches decoded ahead of the
+training loop, mirroring the paper's "RPCs maintain small caching layers".
+"""
+from __future__ import annotations
+
+import queue
+import threading
+
+import numpy as np
+
+from repro.storage.sdk import ShelbyClient
+
+
+def write_token_corpus(client: ShelbyClient, tokens: np.ndarray) -> int:
+    """tokens: 1-D int32 array -> blob id."""
+    tokens = np.ascontiguousarray(tokens, dtype=np.int32)
+    return client.put(tokens.tobytes()).blob_id
+
+
+class BlobTokenDataset:
+    """Deterministic, shardable batch iterator over a token blob."""
+
+    def __init__(
+        self,
+        client: ShelbyClient,
+        blob_id: int,
+        batch: int,
+        seq_len: int,
+        *,
+        shard: int = 0,
+        num_shards: int = 1,
+        seed: int = 0,
+        prefetch: int = 2,
+    ):
+        self.client = client
+        self.blob_id = blob_id
+        self.batch = batch
+        self.seq_len = seq_len
+        self.shard = shard
+        self.num_shards = num_shards
+        meta = client.contract.blobs[blob_id]
+        self.num_tokens = meta.size_bytes // 4
+        self.tokens_per_example = seq_len + 1  # inputs + shifted labels
+        self.num_examples = self.num_tokens // self.tokens_per_example
+        self._rng = np.random.default_rng(seed)
+        self._order = self._rng.permutation(self.num_examples)
+        self._q: queue.Queue = queue.Queue(maxsize=prefetch)
+        self._cursor = shard * batch
+        self._thread: threading.Thread | None = None
+
+    def _fetch_example(self, idx: int) -> np.ndarray:
+        off = int(idx) * self.tokens_per_example * 4
+        raw = self.client.get(self.blob_id, off, self.tokens_per_example * 4)
+        return np.frombuffer(raw, dtype=np.int32)
+
+    def _next_batch(self) -> tuple[np.ndarray, np.ndarray]:
+        rows = []
+        for _ in range(self.batch):
+            if self._cursor >= self.num_examples:
+                self._cursor = self.shard * self.batch  # wrap epoch
+                self._order = self._rng.permutation(self.num_examples)
+            rows.append(self._fetch_example(self._order[self._cursor]))
+            self._cursor += self.num_shards  # stride across data-parallel shards
+        arr = np.stack(rows)
+        return arr[:, :-1], arr[:, 1:]
+
+    def _worker(self, n: int):
+        for _ in range(n):
+            self._q.put(self._next_batch())
+
+    def batches(self, n: int, *, background: bool = True):
+        """Yield n (inputs, labels) batches, prefetching in a worker thread."""
+        if not background:
+            for _ in range(n):
+                yield self._next_batch()
+            return
+        self._thread = threading.Thread(target=self._worker, args=(n,), daemon=True)
+        self._thread.start()
+        for _ in range(n):
+            yield self._q.get()
+        self._thread.join()

@@ -1,0 +1,57 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels execute with ``interpret=True``; on a
+real TPU runtime they compile to Mosaic.  ``repro.core``/``repro.storage``
+call only these wrappers, never `pallas_call` directly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import numpy as np
+
+from repro.kernels import gf_matmul as _gf
+from repro.kernels import ref as _ref
+from repro.kernels import sample_hash as _sh
+
+
+@functools.lru_cache(None)
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def gf_matmul(a, b, *, block_n: int | None = None):
+    """GF(2^8) matmul via the Pallas kernel (interpret-mode off-TPU)."""
+    kwargs = {} if block_n is None else {"block_n": block_n}
+    return _gf.gf_matmul(a, b, interpret=not _on_tpu(), **kwargs)
+
+
+def gf_matmul_np(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """numpy-in/numpy-out convenience for the storage data path."""
+    return np.asarray(gf_matmul(np.asarray(a, np.uint8), np.asarray(b, np.uint8)))
+
+
+def gf_matmul_ref(a, b):
+    return _ref.gf_matmul_ref(a, b)
+
+
+def sample_hash(words, *, seed: int = 0):
+    """Bulk sample digests via the Pallas kernel (interpret-mode off-TPU)."""
+    return _sh.sample_hash(words, seed=seed, interpret=not _on_tpu())
+
+
+def sample_hash_ref(words, seed: int = 0):
+    return _ref.sample_hash_ref(words, seed)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, bq: int = 512, bk: int = 512):
+    """Fused flash attention via the Pallas kernel (interpret-mode off-TPU)."""
+    from repro.kernels import flash_attention as _fa
+
+    return _fa.flash_attention_fused(q, k, v, causal=causal, bq=bq, bk=bk,
+                                     interpret=not _on_tpu())
+
+
+def flash_attention_ref(q, k, v, causal: bool = True):
+    return _ref.flash_attention_ref(q, k, v, causal)

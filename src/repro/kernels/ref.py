@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import gf
+
+
+def gf_matmul_ref(a, b):
+    """GF(2^8) matmul oracle: (M,K) x (K,N) -> (M,N) uint8."""
+    out = gf.matmul_jnp(a.astype(jnp.int32), b.astype(jnp.int32))
+    return out.astype(jnp.uint8)
+
+
+# -- sample hash oracle -------------------------------------------------------
+_PRIME1 = jnp.uint32(2654435761)
+_PRIME2 = jnp.uint32(2246822519)
+_PRIME3 = jnp.uint32(3266489917)
+_PRIME4 = jnp.uint32(668265263)
+
+
+def _rotl(x, r):
+    return (x << r) | (x >> (32 - r))
+
+
+def sample_hash_ref(words, seed=0):
+    """xxhash32-flavoured mix over the last axis.
+
+    words: (..., W) uint32 -> (...,) uint32.  Used for bulk audit-sample
+    hashing; NOT the protocol-grade hash (that is SHA-256 in
+    core/commitments.py) — see DESIGN.md §3.
+    """
+    words = words.astype(jnp.uint32)
+    acc = jnp.full(words.shape[:-1], jnp.uint32(seed) + _PRIME4, jnp.uint32)
+    w = words.shape[-1]
+    for i in range(w):
+        acc = acc + words[..., i] * _PRIME2
+        acc = _rotl(acc, 13) * _PRIME1
+    acc = acc ^ (acc >> 15)
+    acc = acc * _PRIME2
+    acc = acc ^ (acc >> 13)
+    acc = acc * _PRIME3
+    acc = acc ^ (acc >> 16)
+    return acc
+
+
+def flash_attention_ref(q, k, v, causal=True):
+    """Oracle for the fused flash-attention kernel: naive softmax attention.
+
+    q: (B, Sq, H, hd); k, v: (B, Sk, Hkv, hd) -> (B, Sq, H, hd)."""
+    import math
+
+    import jax
+
+    b, sq, h, hd = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    qr = q.reshape(b, sq, hkv, g, hd).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qr, k.astype(jnp.float32)) / math.sqrt(hd)
+    if causal:
+        sk = k.shape[1]
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(sk)[None, :]
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(b, sq, h, hd).astype(q.dtype)

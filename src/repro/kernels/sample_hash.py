@@ -1,0 +1,70 @@
+"""Pallas TPU kernel: bulk audit-sample hashing.
+
+Shelby's internal audits (§4.1) hash 1 KiB samples at high frequency: every
+SP answers per-epoch challenges and every auditor re-hashes received samples
+to verify Merkle proofs.  At production scale that is millions of 1 KiB
+digests per epoch per SP — a bandwidth-bound bulk op worth a kernel.
+
+TPU adaptation (DESIGN.md §3): TPUs have no SHA engine and byte-gather is
+slow, so the *bulk* path uses an xxhash32-style word mixer over uint32 lanes
+(protocol-grade SHA-256 stays on the coordination layer).  Each leaf's words
+live contiguously; the kernel tiles (LEAVES_BLK, WORDS) into VMEM and mixes
+along the word axis with unrolled rotate/multiply steps — pure VPU work.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_LEAVES = 256
+
+_P1 = 2654435761
+_P2 = 2246822519
+_P3 = 3266489917
+_P4 = 668265263
+
+
+def _rotl(x, r):
+    return (x << r) | (x >> (32 - r))
+
+
+def _kernel(w_ref, o_ref, *, words: int, seed: int):
+    w = w_ref[...].astype(jnp.uint32)  # (BL, W)
+    acc = jnp.full((w.shape[0],), jnp.uint32(seed + _P4), jnp.uint32)
+    for i in range(words):
+        acc = acc + w[:, i] * jnp.uint32(_P2)
+        acc = _rotl(acc, 13) * jnp.uint32(_P1)
+    acc = acc ^ (acc >> 15)
+    acc = acc * jnp.uint32(_P2)
+    acc = acc ^ (acc >> 13)
+    acc = acc * jnp.uint32(_P3)
+    acc = acc ^ (acc >> 16)
+    o_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("seed", "block_leaves", "interpret"))
+def sample_hash(
+    words: jax.Array,
+    *,
+    seed: int = 0,
+    block_leaves: int = DEFAULT_BLOCK_LEAVES,
+    interpret: bool = False,
+) -> jax.Array:
+    """words: (L, W) uint32 -> (L,) uint32 digests."""
+    leaves, w = words.shape
+    pad = -leaves % block_leaves
+    if pad:
+        words = jnp.pad(words, ((0, pad), (0, 0)))
+    grid = (words.shape[0] // block_leaves,)
+    out = pl.pallas_call(
+        functools.partial(_kernel, words=w, seed=seed),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_leaves, w), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_leaves,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((words.shape[0],), jnp.uint32),
+        interpret=interpret,
+    )(words)
+    return out[:leaves]

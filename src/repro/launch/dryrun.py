@@ -1,0 +1,207 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. builds the step function (train_step / prefill_step / decode_step),
+  3. ``jit(...).lower(**input_specs).compile()`` against ShapeDtypeStructs
+     (no allocation),
+  4. prints ``compiled.memory_analysis()`` (proves it fits) and
+     ``cost_analysis()`` (FLOPs/bytes for the roofline),
+  5. parses the partitioned HLO for collective bytes,
+  6. appends a JSON record to --out (resumable cache keyed by cell id).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch granite-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+
+from repro.configs import ALL_ARCHS, get
+from repro.configs.base import SHAPES, cell_applicable
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shapes import batch_specs, decode_specs, num_microbatches, serve_param_specs
+from repro.models.model import build
+from repro.sharding import (
+    DECODE_RULES,
+    LONG_RULES,
+    SERVE_RULES,
+    TRAIN_RULES,
+    AxisCtx,
+    tree_shape_structs,
+    tree_shardings,
+)
+from repro.train import optimizer as opt_mod
+from repro.train.step import make_decode_step, make_prefill_step, make_train_step
+
+DEFAULT_OUT = "results/dryrun"
+
+
+def _cell_id(arch: str, shape: str, mesh_kind: str) -> str:
+    return f"{arch}__{shape}__{mesh_kind}"
+
+
+def _opt_state_structs(param_specs, rules, mesh):
+    """ShapeDtypeStructs for {params, m, v, step} with ZeRO-1 shardings."""
+    shardings = tree_shardings(param_specs, rules, mesh)
+    p = tree_shape_structs(param_specs, shardings)
+    return {
+        "params": p,
+        "m": jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, jax.numpy.float32, sharding=s.sharding), p),
+        "v": jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, jax.numpy.float32, sharding=s.sharding), p),
+        "step": jax.ShapeDtypeStruct((), jax.numpy.int32),
+    }
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *, save_hlo: str | None = None,
+             rules_override=None, tag: str = "", shard_grad_accum: bool = False,
+             remat_policy=None, microbatch_override: int | None = None) -> dict:
+    cfg = get(arch)
+    shape = next(s for s in SHAPES if s.name == shape_name)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind, "tag": tag}
+    ok, why = cell_applicable(cfg, shape)
+    if not ok:
+        rec.update({"status": "skipped", "reason": why})
+        return rec
+
+    multi = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    ndev = 1
+    for v in mesh.shape.values():
+        ndev *= v
+    long_mode = shape.name.startswith("long")
+    if shape.kind == "train":
+        rules = dict(TRAIN_RULES)
+    elif long_mode:
+        rules = dict(LONG_RULES)
+    elif shape.kind == "decode":
+        rules = dict(DECODE_RULES)
+    else:
+        rules = dict(SERVE_RULES)
+    if rules_override:
+        rules.update(rules_override)
+    ctx = AxisCtx(rules, mesh, remat_policy=remat_policy)
+    model = build(cfg)
+
+    t0 = time.time()
+    try:
+        if shape.kind == "train":
+            n_mb = microbatch_override or num_microbatches(cfg, shape, mesh)
+            step = make_train_step(cfg, ctx, num_microbatches=n_mb,
+                                   shard_grad_accum=shard_grad_accum)
+            state = _opt_state_structs(model.param_specs(), rules, mesh)
+            batch = batch_specs(cfg, shape, rules, mesh)
+            jitted = jax.jit(step, donate_argnums=(0,))
+            lowered = jitted.lower(state, batch)
+            rec["num_microbatches"] = n_mb
+        elif shape.kind == "prefill":
+            step = make_prefill_step(cfg, ctx)
+            pspecs = serve_param_specs(model)
+            params = tree_shape_structs(pspecs, tree_shardings(pspecs, rules, mesh))
+            batch = batch_specs(cfg, shape, rules, mesh)
+            lowered = jax.jit(step).lower(params, batch)
+        else:  # decode
+            step = make_decode_step(cfg, ctx, long_mode=long_mode)
+            pspecs = serve_param_specs(model)
+            params = tree_shape_structs(pspecs, tree_shardings(pspecs, rules, mesh))
+            cache, tokens, pos = decode_specs(cfg, shape, rules, mesh, long_mode=long_mode)
+            lowered = jax.jit(step, donate_argnums=(1,)).lower(params, cache, tokens, pos)
+        t_lower = time.time() - t0
+
+        t1 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t1
+
+        mem = compiled.memory_analysis()
+        print(f"[{_cell_id(arch, shape_name, mesh_kind)}] memory_analysis: {mem}")
+        cost = compiled.cost_analysis()
+        print(f"[{_cell_id(arch, shape_name, mesh_kind)}] cost: flops={cost.get('flops', 0):.3e} "
+              f"bytes={cost.get('bytes accessed', 0):.3e}")
+        hlo = compiled.as_text()
+        analysis = hlo_analysis.analyze_hlo(hlo, ndev)
+        coll = analysis["collectives"]
+        rec.update({
+            "status": "ok",
+            "devices": ndev,
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "memory": {
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+                "code_bytes": mem.generated_code_size_in_bytes,
+            },
+            "cost": {k: v for k, v in cost.items() if isinstance(v, (int, float))},
+            "collectives": coll,
+            **hlo_analysis.summarize(coll),
+            "cpu_bf16_inflation_bytes": hlo_analysis.cpu_bf16_inflation_bytes(hlo),
+            "hlo_flops": analysis["hlo_flops"],
+            "hlo_bytes": analysis["hlo_bytes"],
+            "hlo_chars": len(hlo),
+        })
+        if save_hlo:
+            p = pathlib.Path(save_hlo)
+            p.parent.mkdir(parents=True, exist_ok=True)
+            p.write_text(hlo)
+    except Exception as e:  # a failure here is a bug in our sharding design
+        rec.update({"status": "error", "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-4000:]})
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ALL_ARCHS)
+    ap.add_argument("--shape", choices=[s.name for s in SHAPES])
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--save-hlo", default=None)
+    args = ap.parse_args()
+
+    outdir = pathlib.Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    archs = ALL_ARCHS if args.all or not args.arch else [args.arch]
+    shapes = [s.name for s in SHAPES] if args.all or not args.shape else [args.shape]
+
+    n_ok = n_skip = n_err = 0
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                cid = _cell_id(arch, shape, mesh_kind)
+                path = outdir / f"{cid}.json"
+                if path.exists() and not args.force:
+                    prev = json.loads(path.read_text())
+                    if prev.get("status") in ("ok", "skipped"):
+                        print(f"[{cid}] cached: {prev['status']}")
+                        n_ok += prev["status"] == "ok"
+                        n_skip += prev["status"] == "skipped"
+                        continue
+                print(f"[{cid}] running...", flush=True)
+                rec = run_cell(arch, shape, mesh_kind, save_hlo=args.save_hlo)
+                path.write_text(json.dumps(rec, indent=1))
+                st = rec["status"]
+                n_ok += st == "ok"
+                n_skip += st == "skipped"
+                n_err += st == "error"
+                print(f"[{cid}] {st}" + (f" ({rec.get('error','')})" if st == "error" else ""),
+                      flush=True)
+    print(f"done: ok={n_ok} skipped={n_skip} errors={n_err}")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

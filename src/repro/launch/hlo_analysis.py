@@ -1,0 +1,368 @@
+"""Post-SPMD HLO analysis: collective-byte accounting for the roofline.
+
+``cost_analysis()`` gives FLOPs and memory bytes but NOT collective traffic,
+so (per the brief) we parse ``compiled.as_text()`` — the partitioned,
+per-device HLO — and sum operand/result sizes of every all-reduce /
+all-gather / reduce-scatter / all-to-all / collective-permute.
+
+Collectives inside ``while`` bodies (scan over layers / microbatches / KV
+chunks) appear once in the text but execute ``trip_count`` times; we
+recover each loop's trip count from the integer constant its condition
+computation compares the induction variable against, and walk the call
+graph (entry -> while bodies -> nested) multiplying as we go.
+
+Wire-byte model (per device, ring algorithms, group size g):
+    all-reduce       2 * bytes * (g-1)/g
+    all-gather       out_bytes * (g-1)/g
+    reduce-scatter   in_bytes  * (g-1)/g
+    all-to-all       bytes * (g-1)/g
+    collective-permute   bytes
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+)$")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_SET_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """'f32[4,128]' or tuple '(f32[..], s32[..])' -> total bytes."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    count: float = 0.0
+    bytes: float = 0.0  # operand bytes (brief's definition)
+    wire_bytes: float = 0.0  # ring-model bytes on the wire per device
+
+    def as_dict(self):
+        return {"count": self.count, "bytes": self.bytes, "wire_bytes": self.wire_bytes}
+
+
+def _split_computations(hlo: str) -> dict[str, list[str]]:
+    """Computation headers sit at column 0: ``%name (args) -> ret {`` (or
+    ``ENTRY %name (...) {``); bodies are indented; ``}`` closes."""
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        if line.startswith(("%", "ENTRY")) and line.rstrip().endswith("{"):
+            m = re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(", line)
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                continue
+        stripped = line.strip()
+        if stripped == "}" or stripped.startswith("} "):
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+    return comps
+
+
+def _entry_name(hlo: str) -> str | None:
+    m = re.search(r"^ENTRY\s+%?([\w\.\-]+)", hlo, re.MULTILINE)
+    return m.group(1) if m else None
+
+
+def _group_size(line: str, total_devices: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_SET_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return total_devices
+
+
+def _trip_count(while_line: str, cond_lines: list[str]) -> int:
+    """Prefer XLA's own ``known_trip_count`` annotation on the while op;
+    fall back to the largest integer constant in the condition."""
+    m = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', while_line)
+    if m:
+        return int(m.group(1))
+    best = 1
+    for line in cond_lines:
+        for c in re.finditer(r"constant\((\d+)\)", line):
+            best = max(best, int(c.group(1)))
+    return best
+
+
+_SKIP_BYTES_OPS = (
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast", "while",
+    "after-all", "partition-id", "replica-id", "iota",
+)
+
+
+def analyze_hlo(hlo: str, total_devices: int) -> dict:
+    """Loop-corrected collectives + FLOPs + fusion-boundary bytes.
+
+    XLA:CPU's cost_analysis does not multiply ``while`` bodies by their trip
+    count, so scan-over-layers programs under-report ~L-fold.  We redo the
+    accounting here: per-computation tallies, then a call-graph walk with
+    while-trip multipliers.
+
+    * FLOPs: 2 * numel(result) * K for every ``dot`` (fusion bodies included).
+    * bytes: operand+result sizes at fusion boundaries / top-level ops — the
+      standard roofline approximation of HBM traffic (fusion-internal
+      values never hit HBM).
+    * collectives: see module docstring.
+    """
+    comps = _split_computations(hlo)
+    entry = _entry_name(hlo)
+
+    # name -> result type string (for operand size lookups)
+    def_types: dict[str, str] = {}
+    for lines in comps.values():
+        for line in lines:
+            m = _DEF_RE.match(line)
+            if m:
+                def_types[m.group(1)] = m.group(2).split(" ", 1)[0]
+
+    calls: dict[str, list[tuple[str, int]]] = defaultdict(list)
+    fusion_bodies: set[str] = set()
+    per_comp_coll: dict[str, list[tuple[str, float, float]]] = defaultdict(list)
+    per_comp_flops: dict[str, float] = defaultdict(float)
+    per_comp_bytes: dict[str, float] = defaultdict(float)
+
+    op_name_re = re.compile(r"=\s*(?:\([^)]*\)|\S+)\s+([\w\-]+)\(")
+
+    # Pass A: params consumed ONLY via (dynamic-)slice inside each body —
+    # at the call site such an operand contributes the slice bytes, not the
+    # whole (possibly L-stacked) array.
+    param_slice_bytes: dict[str, dict[int, float]] = {}
+    for cname, lines in comps.items():
+        params: dict[str, int] = {}
+        for line in lines:
+            pm = re.match(r"\s*%?([\w\.\-]+)\s*=\s*\S+\s+parameter\((\d+)\)", line)
+            if pm:
+                params[pm.group(1)] = int(pm.group(2))
+        if not params:
+            continue
+        sliced: dict[str, float] = {p: 0.0 for p in params}
+        dirty: set[str] = set()
+        for line in lines:
+            s = line.strip()
+            m = _DEF_RE.match(s)
+            if not m or " parameter(" in s:
+                continue
+            rhs = m.group(2)
+            is_slice = re.search(r"\s(dynamic-slice|slice)\(", " " + rhs)
+            out_b = _shape_bytes(rhs.split(" ", 1)[0])
+            for p in params:
+                if re.search(rf"%{re.escape(p)}\b", rhs):
+                    if is_slice:
+                        sliced[p] += out_b
+                    else:
+                        dirty.add(p)
+        param_slice_bytes[cname] = {
+            params[p]: b for p, b in sliced.items() if b > 0 and p not in dirty
+        }
+
+    for cname, lines in comps.items():
+        for line in lines:
+            s = line.strip()
+            if not s or s.startswith("//"):
+                continue
+            wm = re.search(r"while\(.*?\).*condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)", s)
+            if wm:
+                trips = _trip_count(s, comps.get(wm.group(1), []))
+                calls[cname].append((wm.group(2), trips))
+                continue
+            callee = None
+            cm = re.search(r"(?:fusion|call)\(.*?\).*(?:calls|to_apply)=%?([\w\.\-]+)", s)
+            if cm:
+                callee = cm.group(1)
+                calls[cname].append((callee, 1))
+                if "fusion(" in s:
+                    fusion_bodies.add(callee)
+
+            m = _DEF_RE.match(s)
+            if not m:
+                continue
+            name, rhs = m.group(1), m.group(2)
+            om = op_name_re.search("= " + rhs) or op_name_re.search(s)
+            opkind = om.group(1) if om else ""
+            result_type = rhs.split(" ", 1)[0]
+            out_bytes = _shape_bytes(result_type)
+            opargs = re.search(rf"{re.escape(opkind)}\(([^)]*)\)", rhs) if opkind else None
+            in_bytes = 0.0
+            if opargs:
+                slice_adj = param_slice_bytes.get(callee, {}) if callee else {}
+                for i, op in enumerate(opargs.group(1).split(",")):
+                    op = op.strip().lstrip("%")
+                    if i in slice_adj:  # fusion slices this operand internally
+                        in_bytes += slice_adj[i]
+                    else:
+                        in_bytes += _shape_bytes(def_types.get(op, ""))
+
+            # --- FLOPs: dot ops ---
+            if opkind == "dot":
+                km = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", s)
+                lhs_name = opargs.group(1).split(",")[0].strip().lstrip("%") if opargs else ""
+                lhs_type = def_types.get(lhs_name, "")
+                k = 1
+                if km and lhs_type:
+                    sm = _SHAPE_RE.search(lhs_type)
+                    if sm and sm.group(2):
+                        dims = [int(x) for x in sm.group(2).split(",")]
+                        for ci in km.group(1).split(","):
+                            if ci != "":
+                                k *= dims[int(ci)]
+                numel = out_bytes / max(_DTYPE_BYTES.get(result_type.split("[")[0], 4), 1)
+                per_comp_flops[cname] += 2.0 * numel * k
+
+            # --- bytes at fusion boundaries / top-level ops ---
+            # slicing ops only touch the slice, not the whole operand (a
+            # dynamic-slice of stacked (L, ...) weights inside scan reads
+            # one layer, not L); copies/converts move out_bytes once.
+            if opkind and opkind not in _SKIP_BYTES_OPS:
+                if opkind in ("dynamic-slice", "gather", "slice"):
+                    op_bytes = 2.0 * out_bytes
+                elif opkind == "dynamic-update-slice":
+                    # read-modify-write of the update region only
+                    upd = 0.0
+                    if opargs:
+                        parts = [o.strip().lstrip("%") for o in opargs.group(1).split(",")]
+                        if len(parts) >= 2:
+                            upd = _shape_bytes(def_types.get(parts[1], ""))
+                    op_bytes = 2.0 * upd
+                elif opkind in ("convert", "copy", "transpose", "reshape", "broadcast"):
+                    op_bytes = 2.0 * out_bytes
+                elif opkind == "scatter":
+                    op_bytes = in_bytes - out_bytes + 2.0 * out_bytes if in_bytes > out_bytes else 2.0 * out_bytes
+                else:
+                    op_bytes = in_bytes + out_bytes
+                per_comp_bytes[cname] += op_bytes
+
+            # --- collectives ---
+            base = opkind.replace("-start", "")
+            if base in _COLLECTIVES and not opkind.endswith("-done"):
+                g = _group_size(s, total_devices)
+                frac = (g - 1) / max(g, 1)
+                if base == "all-reduce":
+                    wire = 2 * out_bytes * frac
+                elif base == "all-gather":
+                    wire = out_bytes * frac
+                elif base == "reduce-scatter":
+                    wire = in_bytes * frac
+                elif base == "all-to-all":
+                    wire = max(in_bytes, out_bytes) * frac
+                else:
+                    wire = out_bytes
+                per_comp_coll[cname].append((base, max(in_bytes, out_bytes), wire))
+
+    totals: dict[str, CollectiveStats] = defaultdict(CollectiveStats)
+    agg = {"flops": 0.0, "bytes": 0.0}
+    seen_stack: set[str] = set()
+
+    def walk(comp: str, mult: float):
+        if comp in seen_stack:
+            return
+        seen_stack.add(comp)
+        for kind, b, w in per_comp_coll.get(comp, []):
+            st = totals[kind]
+            st.count += mult
+            st.bytes += b * mult
+            st.wire_bytes += w * mult
+        agg["flops"] += per_comp_flops.get(comp, 0.0) * mult
+        if comp not in fusion_bodies:  # fusion-internal values never hit HBM
+            agg["bytes"] += per_comp_bytes.get(comp, 0.0) * mult
+        for callee, m in calls.get(comp, []):
+            walk(callee, mult * m)
+        seen_stack.discard(comp)
+
+    if entry:
+        walk(entry, 1.0)
+    else:
+        for comp in set(per_comp_coll) | set(per_comp_flops):
+            walk(comp, 1.0)
+    return {
+        "collectives": {k: v.as_dict() for k, v in totals.items()},
+        "hlo_flops": agg["flops"],
+        "hlo_bytes": agg["bytes"],
+    }
+
+
+def analyze_collectives(hlo: str, total_devices: int) -> dict[str, dict]:
+    return analyze_hlo(hlo, total_devices)["collectives"]
+
+
+def cpu_bf16_inflation_bytes(hlo: str) -> int:
+    """XLA:CPU has no native bf16 compute: FloatNormalization inserts
+    f32 converts of whole bf16 parameters, which get hoisted out of while
+    loops and show up as multi-GB temps.  A TPU compile keeps bf16 end to
+    end, so for 'does it fit' we subtract the f32 copies of entry-level
+    parameters.  Returns the total bytes of such hoisted f32 buffers."""
+    comps = _split_computations(hlo)
+    entry = _entry_name(hlo)
+    if entry is None:
+        return 0
+    total = 0
+    for line in comps.get(entry, []):
+        s = line.strip()
+        m = re.match(
+            r"%?[\w\.\-]+\s*=\s*(f32\[[\d,]*\])\S*\s+"
+            r"(?:convert|copy|fusion)\(\s*%?(param[\w\.\-]*)\s*\)", s)
+        if m:
+            total += _shape_bytes(m.group(1))
+
+    # In-loop f32 temps of bf16 buffers: XLA:CPU converts whole bf16 loop
+    # carries to f32 around dynamic-update-slice etc. (e.g. a 12.9 GB
+    # f32[64,1,4096,12288] copy of the bf16 remat-carry stack in the
+    # command-r train cell).  On TPU the op runs on bf16 in place.  Count
+    # each distinct >64 MB f32 shape that has a same-shape bf16 twin, once.
+    def_types: dict[str, str] = {}
+    for lines in comps.values():
+        for line in lines:
+            m = _DEF_RE.match(line)
+            if m:
+                def_types[m.group(1)] = m.group(2).split(" ", 1)[0]
+    bf16_shapes = {t.split("]")[0].split("[")[1] for t in def_types.values()
+                   if t.startswith("bf16[")}
+    seen: set[str] = set()
+    for lines in comps.values():
+        for line in lines:
+            m = re.search(r"=\s*(f32)\[([\d,]*)\]\S*\s+convert\(", line)
+            if not m:
+                continue
+            dims = m.group(2)
+            if dims in seen or dims not in bf16_shapes:
+                continue
+            b = _shape_bytes(f"f32[{dims}]")
+            if b > 64 * 1024 * 1024:
+                seen.add(dims)
+                total += b
+    return total
+
+
+def summarize(collectives: dict[str, dict]) -> dict[str, float]:
+    return {
+        "collective_bytes": sum(v["bytes"] for v in collectives.values()),
+        "collective_wire_bytes": sum(v["wire_bytes"] for v in collectives.values()),
+        "collective_count": sum(v["count"] for v in collectives.values()),
+    }

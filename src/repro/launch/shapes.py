@@ -1,0 +1,97 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every (arch x shape) cell.
+
+Weak-type-correct, shardable, zero allocation — the dry-run lowers against
+these.  ``[audio]``/``[vlm]`` archs receive precomputed frame/patch
+embeddings (the modality frontend is a stub, per the assignment)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.models.model import build
+from repro.sharding import ParamSpec, logical_to_spec
+
+# microbatch counts for train_4k (activation-memory control; see DESIGN.md §5)
+TRAIN_MICROBATCHES = {
+    "command-r-plus-104b": "max",  # one sample per device per microbatch
+    "yi-9b": 8,
+    "granite-8b": 8,
+    "falcon-mamba-7b": 8,
+    "starcoder2-3b": 4,
+    "phi-3-vision-4.2b": 4,
+    "qwen3-moe-30b-a3b": 4,
+    "deepseek-v2-lite-16b": 4,
+    "hymba-1.5b": 4,
+    "whisper-tiny": 1,
+}
+
+
+def num_microbatches(cfg: ArchConfig, shape: ShapeCell, mesh) -> int:
+    if shape.kind != "train":
+        return 1
+    dp = 1
+    for a in ("pod", "data"):
+        if a in mesh.shape:
+            dp *= mesh.shape[a]
+    req = TRAIN_MICROBATCHES.get(cfg.name, 1)
+    cap = max(shape.global_batch // dp, 1)
+    return cap if req == "max" else min(req, cap)
+
+
+def _struct(shape, dtype, axes, rules, mesh):
+    spec = logical_to_spec(axes, shape, rules, mesh)
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, spec))
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeCell, rules, mesh) -> dict:
+    """The data-batch structs for a cell (train/prefill); decode handled
+    separately (cache + token)."""
+    gb, s = shape.global_batch, shape.seq_len
+    tok = lambda: _struct((gb, s), jnp.int32, ("batch", "seq"), rules, mesh)
+    lab = lambda: _struct((gb, s), jnp.int32, ("batch", "seq"), rules, mesh)
+    emb = lambda: _struct((gb, s, cfg.d_model), jnp.bfloat16, ("batch", "seq", "embed_act"), rules, mesh)
+
+    if shape.kind == "train":
+        if cfg.is_encdec:
+            frames = _struct((gb, cfg.enc_seq, cfg.d_model), jnp.bfloat16,
+                             ("batch", "frames", "embed_act"), rules, mesh)
+            return {"frames": frames, "tokens": tok(), "labels": lab()}
+        if cfg.input_mode == "embeddings":
+            return {"embeddings": emb(), "labels": lab()}
+        return {"tokens": tok(), "labels": lab()}
+
+    if shape.kind == "prefill":
+        if cfg.is_encdec:  # prefill = encoder pass over `seq_len` frames
+            frames = _struct((gb, s, cfg.d_model), jnp.bfloat16,
+                             ("batch", "frames", "embed_act"), rules, mesh)
+            return {"frames": frames}
+        if cfg.input_mode == "embeddings":
+            return {"embeddings": emb()}
+        return {"tokens": tok()}
+
+    raise ValueError(shape.kind)
+
+
+def decode_specs(cfg: ArchConfig, shape: ShapeCell, rules, mesh, *, long_mode: bool):
+    """(cache_structs, token_struct, pos_struct) for serve_step."""
+    model = build(cfg)
+    cache_specs = model.cache_specs(shape.global_batch, shape.seq_len, long_mode=long_mode)
+    cache = jax.tree.map(
+        lambda sp: _struct(sp.shape, sp.dtype, sp.axes, rules, mesh),
+        cache_specs,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+    tokens = _struct((shape.global_batch, 1), jnp.int32, ("batch", None), rules, mesh)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return cache, tokens, pos
+
+
+def serve_param_specs(model):
+    """bf16 inference weights (no optimizer, no master copies)."""
+    return jax.tree.map(
+        lambda sp: ParamSpec(sp.shape, sp.axes, dtype=jnp.bfloat16, init=sp.init, scale=sp.scale),
+        model.param_specs(),
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )

@@ -1,0 +1,165 @@
+"""GQA/MHA attention module: specs + train / prefill / decode paths."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import (
+    MaskSpec,
+    apply_rope,
+    cast,
+    decode_attention,
+    flash_attention,
+)
+from repro.sharding import ParamSpec, logical_to_spec
+
+
+def cache_update(cache, new, slot, ctx, axes: tuple[str, ...]):
+    """dynamic_update_slice into a cache whose seq dim may be sharded.
+
+    A plain DUS with a traced index into a sharded dimension makes XLA SPMD
+    all-gather the whole cache (gigabytes per layer).  When ``cache_seq`` is
+    sharded we instead shard_map the update: each rank checks whether the
+    slot lands in its shard and writes locally — zero communication.
+    """
+    seq_dim = axes.index("cache_seq")
+    mesh = ctx.mesh if ctx is not None else None
+    start = [0] * cache.ndim
+
+    def plain():
+        start[seq_dim] = slot
+        return jax.lax.dynamic_update_slice(cache, new, tuple(start))
+
+    if mesh is None:
+        return plain()
+    spec = logical_to_spec(axes, cache.shape, ctx.rules, mesh)
+    parts = list(spec) + [None] * (cache.ndim - len(spec))
+    seq_axis = parts[seq_dim]
+    if seq_axis is None:
+        return plain()
+    new_parts = list(parts)
+    new_parts[seq_dim] = None
+    cache_spec, new_spec = P(*parts), P(*new_parts)
+
+    def fn(c, n, s):
+        rank = jax.lax.axis_index(seq_axis)
+        s_loc = c.shape[seq_dim]
+        off = s - rank * s_loc
+        safe = jnp.clip(off, 0, s_loc - 1)
+        st = [0] * c.ndim
+        st[seq_dim] = safe
+        old = jax.lax.dynamic_slice(c, st, n.shape)
+        val = jnp.where((off >= 0) & (off < s_loc), n, old)
+        return jax.lax.dynamic_update_slice(c, val, tuple(st))
+
+    return jax.shard_map(
+        fn, mesh=mesh, in_specs=(cache_spec, new_spec, P()), out_specs=cache_spec,
+        check_vma=False,
+    )(cache, new, slot)
+
+
+def attn_specs(cfg, layers: int | None = None, cross: bool = False):
+    d, h, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    lead = (layers,) if layers else ()
+    lax_ = ("layers",) if layers else ()
+    out = {
+        "wq": ParamSpec(lead + (d, h, hd), lax_ + ("embed", "heads", "head_dim"), init="scaled"),
+        "wk": ParamSpec(lead + (d, hkv, hd), lax_ + ("embed", "kv_heads", "head_dim"), init="scaled"),
+        "wv": ParamSpec(lead + (d, hkv, hd), lax_ + ("embed", "kv_heads", "head_dim"), init="scaled"),
+        "wo": ParamSpec(lead + (h, hd, d), lax_ + ("heads", "head_dim", "embed"), init="scaled"),
+    }
+    if cfg.use_bias:
+        out["bq"] = ParamSpec(lead + (h, hd), lax_ + ("heads", "head_dim"), init="zeros")
+        out["bk"] = ParamSpec(lead + (hkv, hd), lax_ + ("kv_heads", "head_dim"), init="zeros")
+        out["bv"] = ParamSpec(lead + (hkv, hd), lax_ + ("kv_heads", "head_dim"), init="zeros")
+        out["bo"] = ParamSpec(lead + (d,), lax_ + ("embed_act",), init="zeros")
+    return out
+
+
+def _qkv(params, x, kv_source=None):
+    from repro.models.layers import apply_norm
+
+    kv_in = x if kv_source is None else kv_source
+    q = jnp.einsum("bsd,dhk->bshk", x, cast(params["wq"]))
+    k = jnp.einsum("bsd,dhk->bshk", kv_in, cast(params["wk"]))
+    v = jnp.einsum("bsd,dhk->bshk", kv_in, cast(params["wv"]))
+    if "bq" in params:
+        q = q + cast(params["bq"])
+        k = k + cast(params["bk"])
+        v = v + cast(params["bv"])
+    if "q_norm" in params:  # qwen3-style per-head q/k RMSNorm
+        q = apply_norm({"scale": params["q_norm"]}, q, "rmsnorm")
+        k = apply_norm({"scale": params["k_norm"]}, k, "rmsnorm")
+    return q, k, v
+
+
+def _out(params, o):
+    res = jnp.einsum("bshk,hkd->bsd", o, cast(params["wo"]))
+    if "bo" in params:
+        res = res + cast(params["bo"])
+    return res
+
+
+def attn_full(params, x, cfg, ctx, *, positions=None, mask: MaskSpec | None = None,
+              rope: bool = True, kv_source=None, kv_positions=None):
+    """Training / encoder path over a full sequence (chunked internally)."""
+    b, s, _ = x.shape
+    mask = mask or MaskSpec(causal=True)
+    q, k, v = _qkv(params, x, kv_source)
+    q = ctx.constrain(q, "batch", "seq", "heads", "head_dim")
+    k = ctx.constrain(k, "batch", "seq", "kv_heads", "head_dim")
+    if positions is None:
+        positions = jnp.arange(s)
+    if kv_positions is None:
+        kv_positions = jnp.arange(k.shape[1])
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, kv_positions, cfg.rope_theta)
+    o = flash_attention(q, k, v, mask=mask, q_positions=positions, k_positions=kv_positions)
+    return _out(params, o)
+
+
+def init_cache_shape(cfg, batch: int, cache_len: int):
+    return (batch, cache_len, cfg.num_kv_heads, cfg.head_dim_)
+
+
+def attn_prefill(params, x, cfg, ctx, *, mask: MaskSpec | None = None, rope: bool = True):
+    """Like attn_full but also returns the populated KV cache (pre-rope k)."""
+    b, s, _ = x.shape
+    mask = mask or MaskSpec(causal=True)
+    q, k, v = _qkv(params, x)
+    positions = jnp.arange(s)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    o = flash_attention(q, k, v, mask=mask, q_positions=positions, k_positions=positions)
+    return _out(params, o), {"k": k, "v": v}
+
+
+def attn_decode(params, x, cache, pos, cfg, ctx, *, window: int = 0, rope: bool = True):
+    """x: (B, 1, D); cache: {'k','v'}: (B, S, Hkv, hd); pos: scalar int.
+
+    Uses a ring buffer when `window > 0` (slot = pos % S), otherwise writes
+    at `pos`.  Returns (out, new_cache).
+    """
+    q, k, v = _qkv(params, x)
+    if rope:
+        posv = jnp.full((1,), pos)
+        q = apply_rope(q, posv, cfg.rope_theta)
+        k = apply_rope(k, posv, cfg.rope_theta)
+    s_cache = cache["k"].shape[1]
+    slot = pos % s_cache if window else pos
+    kv_axes = ("batch", "cache_seq", "kv_heads", "head_dim")
+    k_new = cache_update(cache["k"], k, slot, ctx, kv_axes)
+    v_new = cache_update(cache["v"], v, slot, ctx, kv_axes)
+    if window:
+        # ring buffer: slot i holds absolute position i + S*floor(...) —
+        # reconstruct: positions = slot_idx + S * ((pos - slot_idx) // S)
+        idx = jnp.arange(s_cache)
+        k_positions = idx + s_cache * ((pos - idx + s_cache) // s_cache) - s_cache
+        k_positions = jnp.where(k_positions < 0, 2**30, k_positions)  # unwritten
+    else:
+        k_positions = jnp.arange(s_cache)
+    o = decode_attention(q, k_new, v_new, k_positions, pos, window=window)
+    return _out(params, o), {"k": k_new, "v": v_new}

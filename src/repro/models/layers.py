@@ -1,0 +1,228 @@
+"""Shared layers: norms, RoPE, MLPs, embeddings, chunked (flash) attention.
+
+Everything is a pure function over explicit param pytrees; parameter shapes
+live in ParamSpec trees (see ``repro.sharding``).  Compute dtype is bf16
+(params f32, cast at use — standard mixed precision), softmax/norm
+statistics in f32.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import ParamSpec
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def cast(x):
+    return x.astype(COMPUTE_DTYPE)
+
+
+# -- norms ---------------------------------------------------------------------
+def norm_specs(d: int, kind: str, prefix_axes=("layers",), layers: int | None = None):
+    shape = ((layers,) if layers else ()) + (d,)
+    axes = (prefix_axes if layers else ()) + ("embed_act",)
+    out = {"scale": ParamSpec(shape, axes, init="ones")}
+    if kind == "layernorm":
+        out["bias"] = ParamSpec(shape, axes, init="zeros")
+    return out
+
+
+def apply_norm(params, x, kind: str, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + eps) * params["scale"].astype(jnp.float32)
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps) * params["scale"].astype(jnp.float32)
+        out = out + params["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# -- rotary position embeddings --------------------------------------------------
+def rope_freqs(dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: (..., S) broadcastable to x.shape[:-2]."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    angles = angles[..., None, :]  # heads axis; batch dims left-broadcast
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- MLPs -------------------------------------------------------------------------
+def mlp_specs(d: int, f: int, kind: str, layers: int | None = None, bias: bool = False):
+    lead = (layers,) if layers else ()
+    lax_ = ("layers",) if layers else ()
+    out = {}
+    if kind == "swiglu":
+        out["gate"] = ParamSpec(lead + (d, f), lax_ + ("embed", "mlp"), init="scaled")
+        out["up"] = ParamSpec(lead + (d, f), lax_ + ("embed", "mlp"), init="scaled")
+        out["down"] = ParamSpec(lead + (f, d), lax_ + ("mlp", "embed"), init="scaled")
+    else:  # gelu
+        out["up"] = ParamSpec(lead + (d, f), lax_ + ("embed", "mlp"), init="scaled")
+        out["down"] = ParamSpec(lead + (f, d), lax_ + ("mlp", "embed"), init="scaled")
+        if bias:
+            out["up_b"] = ParamSpec(lead + (f,), lax_ + ("mlp",), init="zeros")
+            out["down_b"] = ParamSpec(lead + (d,), lax_ + ("embed_act",), init="zeros")
+    return out
+
+
+def apply_mlp(params, x, kind: str, ctx=None):
+    if kind == "swiglu":
+        g = x @ cast(params["gate"])
+        u = x @ cast(params["up"])
+        if ctx is not None:
+            g = ctx.constrain(g, "batch", "seq", "mlp")
+            u = ctx.constrain(u, "batch", "seq", "mlp")
+        h = jax.nn.silu(g) * u
+    else:
+        h = x @ cast(params["up"])
+        if "up_b" in params:
+            h = h + cast(params["up_b"])
+        if ctx is not None:
+            h = ctx.constrain(h, "batch", "seq", "mlp")
+        h = jax.nn.gelu(h)
+    out = h @ cast(params["down"])
+    if "down_b" in params:
+        out = out + cast(params["down_b"])
+    return out
+
+
+# -- chunked (flash-style) attention ------------------------------------------------
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class MaskSpec:
+    causal: bool = True
+    window: int = 0  # 0 = unlimited; >0 = sliding window (causal only)
+
+
+def _block_mask(q_pos, k_pos, spec: MaskSpec):
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if spec.causal:
+        m &= q_pos[:, None] >= k_pos[None, :]
+    if spec.window:
+        m &= q_pos[:, None] - k_pos[None, :] < spec.window
+    return m
+
+
+def flash_attention(
+    q, k, v, *, mask: MaskSpec, q_positions=None, k_positions=None,
+    q_chunk: int = 1024, kv_chunk: int = 1024, scale: float | None = None,
+):
+    """Memory-chunked attention with online softmax (pure JAX, lax.scan).
+
+    q: (B, Sq, H, hd); k: (B, Sk, Hkv, hd); v: (B, Sk, Hkv, hd_v) with
+    H % Hkv == 0 (hd_v may differ from hd, e.g. MLA).
+    Returns (B, Sq, H, hd_v).  Memory high-water: one (B, H, qc, kc) block.
+    """
+    b, sq, h, hd = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    hd_v = v.shape[-1]
+    if hkv != h:
+        # Expand KV to full query heads: the (hkv, g) factorization breaks
+        # XLA head-sharding whenever neither factor divides the model axis
+        # (e.g. command-r 96 = 8 x 12 on a 16-way mesh -> replicated score
+        # blocks, +17 GB/device).  Flat heads shard; KV expansion is a small
+        # transient relative to the score traffic it keeps sharded.
+        g = h // hkv
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+        hkv = h
+    g = 1
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    if q_positions is None:
+        q_positions = jnp.arange(sq)
+    if k_positions is None:
+        k_positions = jnp.arange(sk)
+
+    qc = min(q_chunk, sq)
+    kc = min(kv_chunk, sk)
+    nq, nk = -(-sq // qc), -(-sk // kc)
+    pad_q, pad_k = nq * qc - sq, nk * kc - sk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        q_positions = jnp.pad(q_positions, (0, pad_q), constant_values=-1)
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        k_positions = jnp.pad(k_positions, (0, pad_k), constant_values=2**30)
+
+    # (B, nq, qc, Hkv, g, hd)
+    qr = q.reshape(b, nq, qc, hkv, g, hd)
+    kr = k.reshape(b, nk, kc, hkv, hd)
+    vr = v.reshape(b, nk, kc, hkv, hd_v)
+    qp = q_positions.reshape(nq, qc)
+    kp = k_positions.reshape(nk, kc)
+
+    def q_block(qi):
+        qb = qr[:, qi]  # (B, qc, Hkv, g, hd)
+        qpos = qp[qi]
+
+        def kv_step(carry, ki):
+            m_run, l_run, acc = carry
+            kb, vb, kpos = kr[:, ki], vr[:, ki], kp[ki]
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qb, kb).astype(jnp.float32) * scale
+            mask_blk = _block_mask(qpos, kpos, mask)
+            s = jnp.where(mask_blk[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_run, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_run - m_new)
+            l_new = l_run * corr + p.sum(-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p.astype(vb.dtype), vb
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((b, hkv, g, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, qc), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, qc, hd_v), jnp.float32)
+        # remat: backward recomputes the (qc, kc) score block instead of
+        # storing one per kv step (flash-attention backward semantics)
+        (m_f, l_f, acc), _ = jax.lax.scan(jax.checkpoint(kv_step), (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l_f, 1e-30)[..., None]
+        return out.astype(q.dtype)  # bf16 at the map boundary (stacked nq x block)
+
+    blocks = jax.lax.map(q_block, jnp.arange(nq))  # (nq, B, Hkv, g, qc, hd)
+    out = jnp.moveaxis(blocks, 0, 1)  # (B, nq, Hkv, g, qc, hd)
+    out = out.transpose(0, 1, 4, 2, 3, 5).reshape(b, nq * qc, h, hd_v)
+    return out[:, :sq].astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, k_positions, cur_pos, *, window: int = 0,
+                     scale: float | None = None):
+    """Single-token attention against a cache.
+
+    q: (B, 1, H, hd); caches: (B, S, Hkv, hd); k_positions: (S,) absolute
+    positions held in each cache slot (ring buffers permute them);
+    cur_pos: scalar current position.  Masked to k_pos <= cur_pos (and
+    sliding window if set).
+    """
+    b, _, h, hd = q.shape
+    hkv = k_cache.shape[2]
+    g = h // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qr = q.reshape(b, hkv, g, hd)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qr, k_cache).astype(jnp.float32) * scale
+    valid = k_positions <= cur_pos
+    if window:
+        valid &= k_positions > cur_pos - window
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache)
+    return out.reshape(b, 1, h, hd)

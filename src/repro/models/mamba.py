@@ -1,0 +1,114 @@
+"""Mamba-1 selective SSM (falcon-mamba / hymba's SSM heads).
+
+Training path: depthwise causal conv + selective scan via
+``jax.lax.associative_scan`` over the sequence (the classic
+``(a, b) ∘ (a', b') = (a a', a b' ... )`` linear-recurrence composition),
+with the inner dim sharded over ``model`` so the (B, S, d_inner, state)
+intermediates stay within HBM budgets.
+
+Decode path: O(1) per token — carry (conv_state, ssm_state); this is what
+makes the ``long_500k`` cell sub-quadratic for the SSM/hybrid archs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import cast
+from repro.sharding import ParamSpec
+
+
+def ssm_specs(cfg, layers: int | None = None, d_override: int | None = None):
+    s = cfg.ssm
+    d = d_override or cfg.d_model
+    di, n, cw = s.d_inner, s.state, s.conv_width
+    r = s.dt_rank or max(cfg.d_model // 16, 1)
+    lead = (layers,) if layers else ()
+    la = ("layers",) if layers else ()
+    return {
+        "in_proj": ParamSpec(lead + (d, 2 * di), la + ("embed", "ssm_inner"), init="scaled"),
+        "conv_w": ParamSpec(lead + (cw, di), la + ("conv", "ssm_inner"), init="scaled"),
+        "conv_b": ParamSpec(lead + (di,), la + ("ssm_inner",), init="zeros"),
+        "x_proj": ParamSpec(lead + (di, r + 2 * n), la + ("ssm_inner", None), init="scaled"),
+        "dt_proj": ParamSpec(lead + (r, di), la + ("ssm_dt", "ssm_inner"), init="scaled"),
+        "dt_bias": ParamSpec(lead + (di,), la + ("ssm_inner",), init="zeros"),
+        "a_log": ParamSpec(lead + (di, n), la + ("ssm_inner", "ssm_state"), init="ones"),
+        "d_skip": ParamSpec(lead + (di,), la + ("ssm_inner",), init="ones"),
+        "out_proj": ParamSpec(lead + (di, d), la + ("ssm_inner", "embed"), init="scaled"),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv: x (B, S, di), w (cw, di)."""
+    cw = w.shape[0]
+    s = x.shape[1]
+    out = jnp.zeros_like(x)
+    for i in range(cw):  # tap i multiplies x[t - (cw-1-i)]
+        shifted = jnp.pad(x, ((0, 0), (cw - 1 - i, 0), (0, 0)))[:, :s]
+        out = out + shifted * w[i]
+    return out + b
+
+
+def _ssm_params(p, x_in, cfg):
+    """Common projections: returns (dt, a, b_in, c_out) for scan/step."""
+    s = cfg.ssm
+    r = s.dt_rank or max(cfg.d_model // 16, 1)
+    xdb = x_in @ cast(p["x_proj"])  # (..., r + 2n)
+    dt_r, b_ssm, c_ssm = jnp.split(xdb, [r, r + s.state], axis=-1)
+    dt = jax.nn.softplus(dt_r @ cast(p["dt_proj"]) + cast(p["dt_bias"]))  # (..., di)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))  # (di, n)
+    return dt, a, b_ssm, c_ssm
+
+
+def apply_ssm(p, x, cfg, ctx):
+    """Full-sequence selective scan. x: (B, S, D_in) -> (B, S, D_in)."""
+    xz = x @ cast(p["in_proj"])  # (B, S, 2di)
+    xz = ctx.constrain(xz, "batch", "seq", "ssm_inner")
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    x_in = jax.nn.silu(_causal_conv(x_in, cast(p["conv_w"]), cast(p["conv_b"])))
+    dt, a, b_ssm, c_ssm = _ssm_params(p, x_in, cfg)
+
+    # linear recurrence h_t = A_t h_{t-1} + B_t, associative over t
+    a_bar = jnp.exp(dt[..., None].astype(jnp.float32) * a)  # (B,S,di,n)
+    # b_ssm: (B,S,n) -> (B,S,1,n); dt*x: (B,S,di) -> (B,S,di,1)
+    b_bar = (dt * x_in).astype(jnp.float32)[..., None] * b_ssm.astype(jnp.float32)[..., None, :]
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a2 * a1, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a_bar, b_bar), axis=1)
+    y = (h * c_ssm.astype(jnp.float32)[..., None, :]).sum(-1)  # (B,S,di)
+    y = y.astype(x.dtype) + cast(p["d_skip"]) * x_in
+    y = y * jax.nn.silu(z)
+    return y @ cast(p["out_proj"])
+
+
+def init_ssm_cache_shape(cfg, batch: int):
+    s = cfg.ssm
+    return {
+        "conv": (batch, s.conv_width - 1, s.d_inner),
+        "h": (batch, s.d_inner, s.state),
+    }
+
+
+def apply_ssm_decode(p, x, cache, cfg, ctx):
+    """One-token step. x: (B, 1, D_in); cache: {'conv','h'}."""
+    s = cfg.ssm
+    xz = x @ cast(p["in_proj"])
+    x_in, z = jnp.split(xz[:, 0], 2, axis=-1)  # (B, di)
+    # conv ring: window = [conv_state, x_in]
+    win = jnp.concatenate([cache["conv"], x_in[:, None]], axis=1)  # (B, cw, di)
+    conv_out = (win * cast(p["conv_w"])[None]).sum(1) + cast(p["conv_b"])
+    x_c = jax.nn.silu(conv_out)
+    dt, a, b_ssm, c_ssm = _ssm_params(p, x_c, cfg)
+    a_bar = jnp.exp(dt[..., None].astype(jnp.float32) * a)  # (B,di,n)
+    b_bar = (dt * x_c).astype(jnp.float32)[..., None] * b_ssm.astype(jnp.float32)[..., None, :]
+    h = a_bar * cache["h"] + b_bar  # (B,di,n)
+    y = (h * c_ssm.astype(jnp.float32)[..., None, :]).sum(-1).astype(x.dtype)
+    y = y + cast(p["d_skip"]) * x_c
+    y = y * jax.nn.silu(z)
+    out = (y @ cast(p["out_proj"]))[:, None]
+    new_cache = {"conv": win[:, 1:], "h": h}
+    return out, new_cache

@@ -1,0 +1,117 @@
+"""Multi-head Latent Attention (DeepSeek-V2): train + absorbed decode.
+
+The KV cache stores only the low-rank latent ``c_kv`` (kv_lora_rank) plus a
+single shared RoPE key per position — the compressed-cache property that
+makes MLA the serving-side analogue of the paper's "store less, serve fast"
+philosophy.  Decode uses the *absorbed* formulation: W_uk folds into the
+query and W_uv into the output projection, so attention runs directly in
+the latent space and the cache is never expanded.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import MaskSpec, apply_norm, apply_rope, cast, flash_attention
+from repro.sharding import ParamSpec
+
+
+def mla_specs(cfg, layers: int):
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.num_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    la = ("layers",)
+    lead = (layers,)
+    return {
+        "wq": ParamSpec(lead + (d, h, qk), la + ("embed", "heads", "head_dim"), init="scaled"),
+        "w_dkv": ParamSpec(
+            lead + (d, m.kv_lora_rank + m.qk_rope_head_dim), la + ("embed", "kv_lora"), init="scaled"
+        ),
+        "kv_norm": ParamSpec(lead + (m.kv_lora_rank,), la + ("kv_lora",), init="ones"),
+        "w_uk": ParamSpec(
+            lead + (m.kv_lora_rank, h, m.qk_nope_head_dim), la + ("kv_lora", "heads", "head_dim"),
+            init="scaled",
+        ),
+        "w_uv": ParamSpec(
+            lead + (m.kv_lora_rank, h, m.v_head_dim), la + ("kv_lora", "heads", "head_dim"),
+            init="scaled",
+        ),
+        "wo": ParamSpec(lead + (h, m.v_head_dim, d), la + ("heads", "head_dim", "embed"), init="scaled"),
+    }
+
+
+def _latents(p, x, cfg):
+    """x -> (c_kv normalized, k_rope) latents."""
+    m = cfg.mla
+    dkv = x @ cast(p["w_dkv"])  # (B,S,rank+rope)
+    c_kv, k_rope = jnp.split(dkv, [m.kv_lora_rank], axis=-1)
+    c_kv = apply_norm({"scale": p["kv_norm"]}, c_kv, "rmsnorm")
+    return c_kv, k_rope
+
+
+def _queries(p, x, cfg, positions):
+    m = cfg.mla
+    q = jnp.einsum("bsd,dhk->bshk", x, cast(p["wq"]))
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def apply_mla_full(p, x, cfg, ctx, positions=None):
+    """Training/prefill path (expanded keys/values). Returns (out, cache)."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)
+    c_kv, k_rope = _latents(p, x, cfg)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)  # (B,S,1,rope)
+    q_nope, q_rope = _queries(p, x, cfg, positions)
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, cast(p["w_uk"]))
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, cast(p["w_uv"]))
+    h = cfg.num_heads
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (b, s, h, m.qk_rope_head_dim))], -1)
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    q = ctx.constrain(q, "batch", "seq", "heads", "head_dim")
+    o = flash_attention(
+        q, k, v, mask=MaskSpec(causal=True),
+        scale=1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim),
+    )
+    out = jnp.einsum("bshk,hkd->bsd", o, cast(p["wo"]))
+    cache = {"c_kv": c_kv, "k_rope": k_rope[:, :, 0]}
+    return out, cache
+
+
+def init_mla_cache_shape(cfg, batch: int, cache_len: int):
+    m = cfg.mla
+    return {"c_kv": (batch, cache_len, m.kv_lora_rank), "k_rope": (batch, cache_len, m.qk_rope_head_dim)}
+
+
+def apply_mla_decode(p, x, cache, pos, cfg, ctx):
+    """Absorbed single-token decode. cache: {'c_kv','k_rope'}."""
+    m = cfg.mla
+    b = x.shape[0]
+    from repro.models.attention import cache_update
+
+    posv = jnp.full((1,), pos)
+    c_kv_new, k_rope_new = _latents(p, x, cfg)  # (B,1,rank), (B,1,rope)
+    k_rope_new = apply_rope(k_rope_new[:, :, None, :], posv, cfg.rope_theta)[:, :, 0]
+    c_cache = cache_update(cache["c_kv"], c_kv_new, pos, ctx, ("batch", "cache_seq", "kv_lora"))
+    r_cache = cache_update(cache["k_rope"], k_rope_new, pos, ctx, ("batch", "cache_seq", "head_dim"))
+
+    q_nope, q_rope = _queries(p, x, cfg, posv)  # (B,1,H,*)
+    # absorb W_uk into the query: score space becomes the latent space
+    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, cast(p["w_uk"]))  # (B,1,H,rank)
+    s_lat = jnp.einsum("bshr,btr->bhst", q_lat, c_cache)  # (B,H,1,S)
+    s_rope = jnp.einsum("bshk,btk->bhst", q_rope, r_cache)
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    s = (s_lat + s_rope).astype(jnp.float32) * scale
+    s_cache_len = c_cache.shape[1]
+    valid = jnp.arange(s_cache_len) <= pos
+    s = jnp.where(valid[None, None, None], s, -1e30)
+    probs = jax.nn.softmax(s, axis=-1)
+    ctx_lat = jnp.einsum("bhst,btr->bshr", probs.astype(c_cache.dtype), c_cache)  # (B,1,H,rank)
+    o = jnp.einsum("bshr,rhk->bshk", ctx_lat, cast(p["w_uv"]))  # absorb W_uv
+    out = jnp.einsum("bshk,hkd->bsd", o, cast(p["wo"]))
+    return out, {"c_kv": c_cache, "k_rope": r_cache}

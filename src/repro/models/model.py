@@ -1,0 +1,489 @@
+"""Unified model assembly: every assigned architecture behind one interface.
+
+``build(cfg)`` returns a model object exposing:
+
+* ``param_specs()``                         — ParamSpec tree (shapes+axes)
+* ``loss(params, batch, ctx)``              — training loss (+metrics)
+* ``prefill(params, inputs, ctx)``          — full forward, returns cache
+* ``cache_specs(batch, cache_len)``         — ParamSpec tree for the cache
+* ``decode_step(params, cache, tok, pos, ctx)`` — one-token serve step
+
+All layer stacks run under ``jax.lax.scan`` with per-layer ``jax.checkpoint``
+(remat), so HLO size is O(1) in depth and activation memory is O(sqrt)-ish.
+MoE aux losses ride the scan carry.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import mamba as ssm_mod
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models.layers import (
+    MaskSpec,
+    apply_mlp,
+    apply_norm,
+    cast,
+    mlp_specs,
+    norm_specs,
+)
+from repro.sharding import AxisCtx, ParamSpec
+
+
+def _embed_specs(cfg):
+    v = cfg.padded_vocab  # Megatron-style padding so vocab shards (see base.py)
+    out = {"embed": ParamSpec((v, cfg.d_model), ("vocab", "embed"), init="normal")}
+    if not cfg.tie_embeddings:
+        out["lm_head"] = ParamSpec((v, cfg.d_model), ("vocab", "embed"), init="scaled")
+    return out
+
+
+def _logits(params, h, cfg, ctx):
+    table = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,vd->bsv", h, cast(table))
+    if cfg.padded_vocab != cfg.vocab:  # mask padding ids out of the softmax
+        pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab
+        logits = jnp.where(pad_mask, jnp.asarray(-1e30, logits.dtype), logits)
+    return ctx.constrain(logits, "batch", "seq", "vocab")
+
+
+def _xent(logits, labels):
+    """Mean cross-entropy; logits (B,S,V) bf16 -> f32 stats."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return (lse - gold).mean()
+
+
+# =============================================================================
+# decoder-only LM (dense / moe / mla_moe / ssm / hybrid)
+# =============================================================================
+class DecoderLM:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+
+    # -- parameter tree ---------------------------------------------------------
+    def _block_specs(self, layers: int):
+        cfg = self.cfg
+        fam = cfg.family
+        out = {"ln1": norm_specs(cfg.d_model, cfg.norm, layers=layers)}
+        if fam in ("dense", "moe", "hybrid"):
+            out["attn"] = attn.attn_specs(cfg, layers=layers)
+            if cfg.use_qk_norm:
+                hd = cfg.head_dim_
+                out["attn"]["q_norm"] = ParamSpec((layers, hd), ("layers", "head_dim"), init="ones")
+                out["attn"]["k_norm"] = ParamSpec((layers, hd), ("layers", "head_dim"), init="ones")
+        if fam == "mla_moe":
+            out["mla"] = mla_mod.mla_specs(cfg, layers)
+        if fam in ("ssm", "hybrid"):
+            out["ssm"] = ssm_mod.ssm_specs(cfg, layers=layers)
+        if fam == "hybrid":
+            out["ln_attn_out"] = norm_specs(cfg.d_model, cfg.norm, layers=layers)
+            out["ln_ssm_out"] = norm_specs(cfg.d_model, cfg.norm, layers=layers)
+        # second half: MLP / MoE (ssm family has none — pure mamba blocks)
+        if fam in ("dense", "hybrid"):
+            if not cfg.parallel_block:  # command-r shares ln1 across attn+mlp
+                out["ln2"] = norm_specs(cfg.d_model, cfg.norm, layers=layers)
+            out["mlp"] = mlp_specs(cfg.d_model, cfg.d_ff, cfg.mlp, layers=layers, bias=cfg.use_bias)
+        elif fam in ("moe", "mla_moe"):
+            out["ln2"] = norm_specs(cfg.d_model, cfg.norm, layers=layers)
+            out["moe"] = moe_mod.moe_specs(cfg, layers)
+        return out
+
+    def param_specs(self):
+        cfg = self.cfg
+        n_dense0 = cfg.moe.first_dense_layers if cfg.moe else 0
+        specs = dict(_embed_specs(cfg))
+        specs["final_norm"] = norm_specs(cfg.d_model, cfg.norm)
+        specs["blocks"] = self._block_specs(cfg.num_layers - n_dense0)
+        if n_dense0:
+            d0 = {
+                "ln1": norm_specs(cfg.d_model, cfg.norm, layers=n_dense0),
+                "mla": mla_mod.mla_specs(cfg, n_dense0),
+                "ln2": norm_specs(cfg.d_model, cfg.norm, layers=n_dense0),
+                "mlp": mlp_specs(cfg.d_model, cfg.moe.first_dense_d_ff, "swiglu", layers=n_dense0),
+            }
+            specs["dense0"] = d0
+        return specs
+
+    # -- one block, full-sequence ---------------------------------------------------
+    def _block_full(self, block, h, ctx, *, mask: MaskSpec, dense_mlp: bool = False):
+        cfg = self.cfg
+        fam = cfg.family if not dense_mlp else "mla_dense"
+        x = apply_norm(block["ln1"], h, cfg.norm)
+        aux = jnp.zeros((), jnp.float32)
+
+        if fam in ("dense", "moe", "hybrid"):
+            a_out = self._attn_full(block["attn"], x, ctx, mask)
+        if fam in ("mla_moe", "mla_dense"):
+            a_out, _ = mla_mod.apply_mla_full(block["mla"], x, cfg, ctx)
+        if fam == "ssm":
+            a_out = ssm_mod.apply_ssm(block["ssm"], x, cfg, ctx)
+        if fam == "hybrid":
+            s_out = ssm_mod.apply_ssm(block["ssm"], x, cfg, ctx)
+            a_out = 0.5 * (
+                apply_norm(block["ln_attn_out"], a_out, cfg.norm)
+                + apply_norm(block["ln_ssm_out"], s_out, cfg.norm)
+            )
+
+        if cfg.parallel_block:  # command-r: attn and mlp read the same norm
+            m_out = apply_mlp(block["mlp"], x, cfg.mlp, ctx)
+            return h + a_out + m_out, aux
+
+        h = h + a_out
+        if fam == "ssm":
+            return h, aux
+        x2 = apply_norm(block["ln2"], h, cfg.norm)
+        if fam in ("moe", "mla_moe"):
+            m_out, aux = moe_mod.apply_moe(block["moe"], x2, cfg, ctx)
+        else:
+            m_out = apply_mlp(block["mlp"], x2, cfg.mlp, ctx)
+        return h + m_out, aux
+
+    def _attn_full(self, ap, x, ctx, mask):
+        return attn.attn_full(ap, x, self.cfg, ctx, mask=mask)
+
+    # -- scan over layers --------------------------------------------------------------
+    @staticmethod
+    def _ckpt(fn, ctx):
+        if getattr(ctx, "remat_policy", None) is not None:
+            return jax.checkpoint(fn, policy=ctx.remat_policy)
+        return jax.checkpoint(fn)
+
+    def _run_stack(self, params, h, ctx, *, mask: MaskSpec):
+        cfg = self.cfg
+
+        def body(carry, layer_params):
+            h, aux = carry
+            h2, aux2 = self._block_full(layer_params, h, ctx, mask=mask)
+            return (h2, aux + aux2), None
+
+        if "dense0" in params:
+            def body0(carry, layer_params):
+                h, aux = carry
+                h2, aux2 = self._block_full(layer_params, h, ctx, mask=mask, dense_mlp=True)
+                return (h2, aux + aux2), None
+
+            (h, aux0), _ = jax.lax.scan(
+                self._ckpt(body0, ctx), (h, jnp.zeros((), jnp.float32)), params["dense0"]
+            )
+        else:
+            aux0 = jnp.zeros((), jnp.float32)
+        (h, aux), _ = jax.lax.scan(self._ckpt(body, ctx), (h, aux0), params["blocks"])
+        return h, aux
+
+    def _inputs_to_h(self, params, batch, ctx):
+        if self.cfg.input_mode == "embeddings":
+            h = cast(batch["embeddings"])
+        else:
+            h = cast(params["embed"])[batch["tokens"]]
+        return ctx.constrain(h, "batch", "seq", "embed_act")
+
+    # -- public: train loss ------------------------------------------------------------
+    def loss(self, params, batch, ctx):
+        cfg = self.cfg
+        h = self._inputs_to_h(params, batch, ctx)
+        h, aux = self._run_stack(params, h, ctx, mask=MaskSpec(causal=True))
+        h = apply_norm(params["final_norm"], h, cfg.norm)
+        logits = _logits(params, h, cfg, ctx)
+        loss = _xent(logits, batch["labels"])
+        if cfg.moe:
+            loss = loss + cfg.moe.router_aux_weight * aux / max(cfg.num_layers, 1)
+        return loss, {"xent": loss, "aux": aux}
+
+    # -- public: prefill ------------------------------------------------------------------
+    def prefill(self, params, batch, ctx):
+        """Returns (last-position logits, populated cache)."""
+        cfg = self.cfg
+        h = self._inputs_to_h(params, batch, ctx)
+        mask = MaskSpec(causal=True)
+        caches = []
+
+        def body(carry, layer_params):
+            h, aux = carry
+            x = apply_norm(layer_params["ln1"], h, cfg.norm)
+            cache = {}
+            if cfg.family in ("dense", "moe", "hybrid"):
+                a_out, kv = attn.attn_prefill(layer_params["attn"], x, cfg, ctx, mask=mask)
+                cache.update(kv)
+            if cfg.family == "mla_moe":
+                a_out, kv = mla_mod.apply_mla_full(layer_params["mla"], x, cfg, ctx)
+                cache.update(kv)
+            if cfg.family in ("ssm", "hybrid"):
+                s_out = ssm_mod.apply_ssm(layer_params["ssm"], x, cfg, ctx)
+                # terminal ssm state for decode continuation
+                if cfg.family == "hybrid":
+                    a_out = 0.5 * (
+                        apply_norm(layer_params["ln_attn_out"], a_out, cfg.norm)
+                        + apply_norm(layer_params["ln_ssm_out"], s_out, cfg.norm)
+                    )
+                else:
+                    a_out = s_out
+            if cfg.parallel_block:
+                h = h + a_out + apply_mlp(layer_params["mlp"], x, cfg.mlp, ctx)
+                return (h, aux), cache
+            h = h + a_out
+            if cfg.family == "ssm":
+                return (h, aux), cache
+            x2 = apply_norm(layer_params["ln2"], h, cfg.norm)
+            if cfg.family in ("moe", "mla_moe"):
+                m_out, aux2 = moe_mod.apply_moe(layer_params["moe"], x2, cfg, ctx)
+                aux = aux + aux2
+            else:
+                m_out = apply_mlp(layer_params["mlp"], x2, cfg.mlp, ctx)
+            return (h + m_out, aux), cache
+
+        aux0 = jnp.zeros((), jnp.float32)
+        if "dense0" in params:
+            def body0(carry, lp):
+                h, aux = carry
+                h2, aux2 = self._block_full(lp, h, ctx, mask=mask, dense_mlp=True)
+                return (h2, aux + aux2), None
+            (h, aux0), _ = jax.lax.scan(self._ckpt(body0, ctx), (h, aux0), params["dense0"])
+        (h, _), cache = jax.lax.scan(self._ckpt(body, ctx), (h, aux0), params["blocks"])
+        h = apply_norm(params["final_norm"], h, cfg.norm)
+        logits = _logits(params, h[:, -1:], cfg, ctx)
+        return logits, cache
+
+    # -- public: decode -------------------------------------------------------------------
+    def cache_specs(self, batch: int, cache_len: int, *, long_mode: bool = False):
+        cfg = self.cfg
+        L = cfg.num_layers - (cfg.moe.first_dense_layers if cfg.moe else 0)
+        out = {}
+        eff_len = min(cache_len, cfg.long_window) if (long_mode and cfg.long_window) else cache_len
+        if cfg.family in ("dense", "moe", "hybrid"):
+            b_, s_, hkv, hd = attn.init_cache_shape(cfg, batch, eff_len)
+            kv_axes = ("layers", "batch", "cache_seq", "kv_heads", "head_dim")
+            out["k"] = ParamSpec((L, b_, s_, hkv, hd), kv_axes, dtype=jnp.bfloat16, init="zeros")
+            out["v"] = ParamSpec((L, b_, s_, hkv, hd), kv_axes, dtype=jnp.bfloat16, init="zeros")
+        if cfg.family == "mla_moe":
+            shapes = mla_mod.init_mla_cache_shape(cfg, batch, cache_len)
+            out["c_kv"] = ParamSpec((L,) + shapes["c_kv"], ("layers", "batch", "cache_seq", "kv_lora"),
+                                    dtype=jnp.bfloat16, init="zeros")
+            out["k_rope"] = ParamSpec((L,) + shapes["k_rope"], ("layers", "batch", "cache_seq", None),
+                                      dtype=jnp.bfloat16, init="zeros")
+            d0 = cfg.moe.first_dense_layers
+            if d0:
+                out["c_kv0"] = ParamSpec((d0,) + shapes["c_kv"], ("layers", "batch", "cache_seq", "kv_lora"),
+                                         dtype=jnp.bfloat16, init="zeros")
+                out["k_rope0"] = ParamSpec((d0,) + shapes["k_rope"], ("layers", "batch", "cache_seq", None),
+                                           dtype=jnp.bfloat16, init="zeros")
+        if cfg.family in ("ssm", "hybrid"):
+            shapes = ssm_mod.init_ssm_cache_shape(cfg, batch)
+            out["conv"] = ParamSpec((L,) + shapes["conv"], ("layers", "batch", "conv", "ssm_inner"),
+                                    dtype=jnp.bfloat16, init="zeros")
+            out["h_ssm"] = ParamSpec((L,) + shapes["h"], ("layers", "batch", "ssm_inner", "ssm_state"),
+                                     dtype=jnp.float32, init="zeros")
+        return out
+
+    def decode_step(self, params, cache, tokens, pos, ctx, *, long_mode: bool = False):
+        """tokens: (B, 1) int32; pos: scalar. Returns (logits, new_cache)."""
+        cfg = self.cfg
+        window = cfg.long_window if (long_mode and cfg.long_window) else 0
+        h = cast(params["embed"])[tokens]
+        h = ctx.constrain(h, "batch", "seq", "embed_act")
+
+        def body(carry, xs):
+            h, _ = carry
+            lp, lc = xs
+            x = apply_norm(lp["ln1"], h, cfg.norm)
+            ncache = {}
+            if cfg.family in ("dense", "moe", "hybrid"):
+                a_out, kv = self._attn_decode(lp["attn"], x, {"k": lc["k"], "v": lc["v"]}, pos, ctx, window)
+                ncache.update(kv)
+            if cfg.family == "mla_moe":
+                a_out, kv = mla_mod.apply_mla_decode(
+                    lp["mla"], x, {"c_kv": lc["c_kv"], "k_rope": lc["k_rope"]}, pos, cfg, ctx)
+                ncache.update(kv)
+            if cfg.family in ("ssm", "hybrid"):
+                s_out, sc = ssm_mod.apply_ssm_decode(
+                    lp["ssm"], x, {"conv": lc["conv"], "h": lc["h_ssm"]}, cfg, ctx)
+                ncache["conv"], ncache["h_ssm"] = sc["conv"], sc["h"]
+                if cfg.family == "hybrid":
+                    a_out = 0.5 * (
+                        apply_norm(lp["ln_attn_out"], a_out, cfg.norm)
+                        + apply_norm(lp["ln_ssm_out"], s_out, cfg.norm)
+                    )
+                else:
+                    a_out = s_out
+            if cfg.parallel_block:
+                h = h + a_out + apply_mlp(lp["mlp"], x, cfg.mlp, ctx)
+                return (h, jnp.zeros((), jnp.float32)), ncache
+            h = h + a_out
+            if cfg.family == "ssm":
+                return (h, jnp.zeros((), jnp.float32)), ncache
+            x2 = apply_norm(lp["ln2"], h, cfg.norm)
+            if cfg.family in ("moe", "mla_moe"):
+                m_out, _ = moe_mod.apply_moe(lp["moe"], x2, cfg, ctx)
+            else:
+                m_out = apply_mlp(lp["mlp"], x2, cfg.mlp, ctx)
+            return (h + m_out, jnp.zeros((), jnp.float32)), ncache
+
+        new_cache = dict(cache)
+        if "dense0" in params:
+            def body0(carry, xs):
+                h, _ = carry
+                lp, lc = xs
+                x = apply_norm(lp["ln1"], h, cfg.norm)
+                a_out, kv = mla_mod.apply_mla_decode(
+                    lp["mla"], x, {"c_kv": lc["c_kv0"], "k_rope": lc["k_rope0"]}, pos, cfg, ctx)
+                h = h + a_out
+                x2 = apply_norm(lp["ln2"], h, cfg.norm)
+                h = h + apply_mlp(lp["mlp"], x2, cfg.mlp, ctx)
+                return (h, jnp.zeros((), jnp.float32)), {"c_kv0": kv["c_kv"], "k_rope0": kv["k_rope"]}
+
+            cache0 = {"c_kv0": cache["c_kv0"], "k_rope0": cache["k_rope0"]}
+            (h, _), nc0 = jax.lax.scan(body0, (h, jnp.zeros((), jnp.float32)),
+                                       (params["dense0"], cache0))
+            new_cache.update(nc0)
+
+        main_cache = {k: v for k, v in cache.items() if not k.endswith("0")}
+        (h, _), nc = jax.lax.scan(body, (h, jnp.zeros((), jnp.float32)),
+                                  (params["blocks"], main_cache))
+        new_cache.update(nc)
+        h = apply_norm(params["final_norm"], h, cfg.norm)
+        logits = _logits(params, h, cfg, ctx)
+        return logits, new_cache
+
+    def _attn_decode(self, ap, x, lc, pos, ctx, window):
+        return attn.attn_decode(ap, x, lc, pos, self.cfg, ctx, window=window)
+
+
+# =============================================================================
+# encoder-decoder (whisper-style; stub audio frontend supplies frame embeds)
+# =============================================================================
+class EncDecLM:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+
+    def param_specs(self):
+        cfg = self.cfg
+        enc = {
+            "ln1": norm_specs(cfg.d_model, cfg.norm, layers=cfg.enc_layers),
+            "attn": attn.attn_specs(cfg, layers=cfg.enc_layers),
+            "ln2": norm_specs(cfg.d_model, cfg.norm, layers=cfg.enc_layers),
+            "mlp": mlp_specs(cfg.d_model, cfg.d_ff, cfg.mlp, layers=cfg.enc_layers, bias=cfg.use_bias),
+        }
+        dec = {
+            "ln1": norm_specs(cfg.d_model, cfg.norm, layers=cfg.num_layers),
+            "self_attn": attn.attn_specs(cfg, layers=cfg.num_layers),
+            "ln_x": norm_specs(cfg.d_model, cfg.norm, layers=cfg.num_layers),
+            "cross_attn": attn.attn_specs(cfg, layers=cfg.num_layers, cross=True),
+            "ln2": norm_specs(cfg.d_model, cfg.norm, layers=cfg.num_layers),
+            "mlp": mlp_specs(cfg.d_model, cfg.d_ff, cfg.mlp, layers=cfg.num_layers, bias=cfg.use_bias),
+        }
+        return {
+            **_embed_specs(cfg),
+            "enc_blocks": enc,
+            "enc_norm": norm_specs(cfg.d_model, cfg.norm),
+            "dec_blocks": dec,
+            "final_norm": norm_specs(cfg.d_model, cfg.norm),
+        }
+
+    def encode(self, params, frames, ctx):
+        """frames: (B, S_enc, D) stub frontend output -> encoder states."""
+        cfg = self.cfg
+        h = cast(frames)
+        h = ctx.constrain(h, "batch", "seq", "embed_act")
+        mask = MaskSpec(causal=False)
+
+        def body(h, lp):
+            x = apply_norm(lp["ln1"], h, cfg.norm)
+            h = h + attn.attn_full(lp["attn"], x, cfg, ctx, mask=mask)
+            x2 = apply_norm(lp["ln2"], h, cfg.norm)
+            h = h + apply_mlp(lp["mlp"], x2, cfg.mlp, ctx)
+            return h, None
+
+        h, _ = jax.lax.scan(DecoderLM._ckpt(body, ctx), h, params["enc_blocks"])
+        return apply_norm(params["enc_norm"], h, cfg.norm)
+
+    def _decoder(self, params, tokens, enc_out, ctx, collect_cache: bool = False):
+        cfg = self.cfg
+        h = cast(params["embed"])[tokens]
+        h = ctx.constrain(h, "batch", "seq", "embed_act")
+
+        def body(h, lp):
+            x = apply_norm(lp["ln1"], h, cfg.norm)
+            cache = {}
+            if collect_cache:
+                a_out, kv = attn.attn_prefill(lp["self_attn"], x, cfg, ctx, mask=MaskSpec(causal=True))
+                cache.update({"k": kv["k"], "v": kv["v"]})
+            else:
+                a_out = attn.attn_full(lp["self_attn"], x, cfg, ctx, mask=MaskSpec(causal=True))
+            h = h + a_out
+            xx = apply_norm(lp["ln_x"], h, cfg.norm)
+            h = h + attn.attn_full(
+                lp["cross_attn"], xx, cfg, ctx, mask=MaskSpec(causal=False),
+                rope=False, kv_source=enc_out,
+            )
+            x2 = apply_norm(lp["ln2"], h, cfg.norm)
+            h = h + apply_mlp(lp["mlp"], x2, cfg.mlp, ctx)
+            return h, cache if collect_cache else None
+
+        h, caches = jax.lax.scan(DecoderLM._ckpt(body, ctx), h, params["dec_blocks"])
+        return apply_norm(params["final_norm"], h, cfg.norm), caches
+
+    def loss(self, params, batch, ctx):
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["frames"], ctx)
+        h, _ = self._decoder(params, batch["tokens"], enc_out, ctx)
+        logits = _logits(params, h, cfg, ctx)
+        loss = _xent(logits, batch["labels"])
+        return loss, {"xent": loss, "aux": jnp.zeros((), jnp.float32)}
+
+    def prefill(self, params, batch, ctx):
+        """prefill_32k = encoder pass over the frame sequence (+1-tok dec)."""
+        enc_out = self.encode(params, batch["frames"], ctx)
+        bos = jnp.zeros((enc_out.shape[0], 1), jnp.int32)
+        h, caches = self._decoder(params, bos, enc_out, ctx, collect_cache=True)
+        logits = _logits(params, h[:, -1:], self.cfg, ctx)
+        return logits, {"k": caches["k"], "v": caches["v"], "enc_out": enc_out}
+
+    def cache_specs(self, batch: int, cache_len: int, *, long_mode: bool = False):
+        cfg = self.cfg
+        b_, s_, hkv, hd = attn.init_cache_shape(cfg, batch, cache_len)
+        L = cfg.num_layers
+        kv_axes = ("layers", "batch", "cache_seq", "kv_heads", "head_dim")
+        return {
+            "k": ParamSpec((L, b_, s_, hkv, hd), kv_axes, dtype=jnp.bfloat16, init="zeros"),
+            "v": ParamSpec((L, b_, s_, hkv, hd), kv_axes, dtype=jnp.bfloat16, init="zeros"),
+            "enc_out": ParamSpec((batch, cfg.enc_seq, cfg.d_model),
+                                 ("batch", "frames", "embed_act"), dtype=jnp.bfloat16, init="zeros"),
+        }
+
+    def decode_step(self, params, cache, tokens, pos, ctx, *, long_mode: bool = False):
+        cfg = self.cfg
+        h = cast(params["embed"])[tokens]
+        enc_out = cache["enc_out"]
+
+        def body(carry, xs):
+            h, _ = carry
+            lp, lc = xs
+            x = apply_norm(lp["ln1"], h, cfg.norm)
+            a_out, kv = attn.attn_decode(lp["self_attn"], x, {"k": lc["k"], "v": lc["v"]}, pos, cfg, ctx)
+            h = h + a_out
+            xx = apply_norm(lp["ln_x"], h, cfg.norm)
+            h = h + attn.attn_full(
+                lp["cross_attn"], xx, cfg, ctx, mask=MaskSpec(causal=False),
+                rope=False, kv_source=enc_out,
+            )
+            x2 = apply_norm(lp["ln2"], h, cfg.norm)
+            h = h + apply_mlp(lp["mlp"], x2, cfg.mlp, ctx)
+            return (h, jnp.zeros((), jnp.float32)), kv
+
+        (h, _), nc = jax.lax.scan(body, (h, jnp.zeros((), jnp.float32)),
+                                  (params["dec_blocks"], {"k": cache["k"], "v": cache["v"]}))
+        h = apply_norm(params["final_norm"], h, cfg.norm)
+        logits = _logits(params, h, cfg, ctx)
+        return logits, {"k": nc["k"], "v": nc["v"], "enc_out": enc_out}
+
+
+def build(cfg: ArchConfig):
+    return EncDecLM(cfg) if cfg.is_encdec else DecoderLM(cfg)

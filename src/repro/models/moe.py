@@ -1,0 +1,183 @@
+"""Routed mixture-of-experts (GShard/Switch-style top-k with capacity).
+
+Two execution paths with identical math:
+
+* **local** (ctx.mesh is None): plain jnp, used by CPU smoke tests.
+* **shard_map EP** (mesh present): experts are sharded over the ``model``
+  axis (expert parallelism).  Each device routes its (data-sharded,
+  model-replicated) tokens, builds a capacity-bounded buffer **only for its
+  local experts**, runs the expert FFNs, and the per-rank partial outputs
+  are ``psum``'d over ``model`` — one all-reduce per MoE layer, the same
+  collective a Megatron row-parallel MLP costs, with expert weights also
+  FSDP-sharded over ``data`` and all-gathered in-layer.
+
+Dispatch is sort-free *scatter-by-position*: positions inside each expert
+come from a stable argsort of the (token, k) expert assignments, overflow
+beyond capacity is dropped (token keeps its other experts / residual),
+exactly the GShard capacity-factor semantics.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import cast
+from repro.sharding import ParamSpec
+
+
+def moe_specs(cfg, layers: int):
+    m = cfg.moe
+    d = cfg.d_model
+    out = {
+        "router": ParamSpec((layers, d, m.num_experts), ("layers", "embed_act", None), init="scaled"),
+        "gate": ParamSpec(
+            (layers, m.num_experts, d, m.expert_d_ff),
+            ("layers", "experts", "expert_embed", "expert_mlp"), init="scaled",
+        ),
+        "up": ParamSpec(
+            (layers, m.num_experts, d, m.expert_d_ff),
+            ("layers", "experts", "expert_embed", "expert_mlp"), init="scaled",
+        ),
+        "down": ParamSpec(
+            (layers, m.num_experts, m.expert_d_ff, d),
+            ("layers", "experts", "expert_mlp", "expert_embed"), init="scaled",
+        ),
+    }
+    if m.num_shared:
+        f_sh = m.shared_d_ff or m.expert_d_ff * m.num_shared
+        out["shared_gate"] = ParamSpec((layers, d, f_sh), ("layers", "embed", "mlp"), init="scaled")
+        out["shared_up"] = ParamSpec((layers, d, f_sh), ("layers", "embed", "mlp"), init="scaled")
+        out["shared_down"] = ParamSpec((layers, f_sh, d), ("layers", "mlp", "embed"), init="scaled")
+    return out
+
+
+def _route(x_flat, router_w, top_k: int):
+    """(T, D) -> (idx (T,k), weights (T,k), aux_loss scalar)."""
+    logits = (x_flat.astype(jnp.float32)) @ router_w.astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, idx = jax.lax.top_k(probs, top_k)
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balance aux: E * sum_e(fraction_e * prob_e)
+    e = probs.shape[-1]
+    frac = jnp.zeros(e).at[idx.reshape(-1)].add(1.0) / idx.size
+    aux = e * jnp.sum(frac * probs.mean(0))
+    return idx, weights.astype(x_flat.dtype), aux
+
+
+def _dispatch_indices(idx, num_experts: int, capacity: int, lo: int, hi: int):
+    """(T, k) expert ids -> scatter destinations into an (hi-lo)*C buffer.
+
+    Entries routed to experts outside [lo, hi) or beyond capacity map to the
+    drop slot (= size).  Returns (dest (T*k,), src_token (T*k,)).
+    """
+    t, k = idx.shape
+    flat_e = idx.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    first = jnp.searchsorted(sorted_e, jnp.arange(num_experts))
+    pos_in_e = jnp.arange(t * k) - first[sorted_e]
+    local = (sorted_e >= lo) & (sorted_e < hi) & (pos_in_e < capacity)
+    size = (hi - lo) * capacity
+    dest_sorted = jnp.where(local, (sorted_e - lo) * capacity + pos_in_e, size)
+    inv = jnp.argsort(order, stable=True)
+    dest = dest_sorted[inv]  # back to (token, k) order
+    src_token = jnp.arange(t * k) // k
+    return dest, src_token
+
+
+def _expert_ffn(buf, gate_w, up_w, down_w):
+    """buf: (E_loc, C, D) -> (E_loc, C, D) via per-expert SwiGLU."""
+    g = jnp.einsum("ecd,edf->ecf", buf, cast(gate_w))
+    u = jnp.einsum("ecd,edf->ecf", buf, cast(up_w))
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("ecf,efd->ecd", h, cast(down_w))
+
+
+def _moe_local(x_flat, params_l, cfg, lo: int, hi: int, capacity: int):
+    """Token dispatch + expert FFN for experts [lo, hi). Pure jnp."""
+    m = cfg.moe
+    d = x_flat.shape[-1]
+    idx, weights, aux = _route(x_flat, params_l["router"], m.top_k)
+    dest, src = _dispatch_indices(idx, m.num_experts, capacity, lo, hi)
+    e_loc = hi - lo
+    size = e_loc * capacity
+    buf = jnp.zeros((size + 1, d), x_flat.dtype).at[dest].set(x_flat[src], mode="drop")
+    buf = buf[:size].reshape(e_loc, capacity, d)
+    out_buf = _expert_ffn(buf, params_l["gate"][lo:hi], params_l["up"][lo:hi], params_l["down"][lo:hi])
+    padded = jnp.concatenate([out_buf.reshape(size, d), jnp.zeros((1, d), x_flat.dtype)])
+    vals = padded[jnp.minimum(dest, size)]
+    vals = jnp.where((dest < size)[:, None], vals, 0.0)
+    t = x_flat.shape[0]
+    y = (vals.reshape(t, m.top_k, d) * weights[..., None]).sum(1)
+    return y, aux
+
+
+def apply_moe(params_l, x, cfg, ctx):
+    """x: (B, S, D) -> (out, aux_loss).  params_l: this layer's slice."""
+    m = cfg.moe
+    b, s, d = x.shape
+    x_flat = x.reshape(-1, d)
+
+    if ctx.mesh is None or "model" not in ctx.mesh.shape:
+        capacity = max(int(math.ceil(x_flat.shape[0] * m.top_k / m.num_experts * m.capacity_factor)), m.top_k)
+        y, aux = _moe_local(x_flat, params_l, cfg, 0, m.num_experts, capacity)
+    else:
+        mesh = ctx.mesh
+        ep = mesh.shape["model"]
+        dp_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+        dp = math.prod(mesh.shape[a] for a in dp_axes)
+        t_local = max(x_flat.shape[0] // dp, 1)
+        capacity = max(int(math.ceil(t_local * m.top_k / m.num_experts * m.capacity_factor)), m.top_k)
+        e_loc = m.num_experts // ep
+        e_rule = ctx.rules.get("expert_embed") or ()
+        fsdp_axes = tuple(a for a in e_rule if a in mesh.shape)  # FSDP over data?
+        fsdp = bool(fsdp_axes) and d % dp == 0 and "model" not in e_rule
+
+        tok_spec = P(dp_axes if x_flat.shape[0] % dp == 0 else None, None)
+        w_spec = P("model", fsdp_axes, None) if fsdp else P("model", None, None)
+        wd_spec = P("model", None, fsdp_axes) if fsdp else P("model", None, None)
+
+        def shard_fn(xf, router_w, gate_w, up_w, down_w):
+            rank = jax.lax.axis_index("model")
+            if fsdp:
+                gate_w = jax.lax.all_gather(gate_w, fsdp_axes, axis=1, tiled=True)
+                up_w = jax.lax.all_gather(up_w, fsdp_axes, axis=1, tiled=True)
+                down_w = jax.lax.all_gather(down_w, fsdp_axes, axis=2, tiled=True)
+            idx, weights, aux = _route(xf, router_w, m.top_k)
+            lo = rank * e_loc
+            dest, src = _dispatch_indices(idx, m.num_experts, capacity, 0, m.num_experts)
+            # localize: only this rank's expert range lands in the buffer
+            local = (dest >= lo * capacity) & (dest < (lo + e_loc) * capacity)
+            size = e_loc * capacity
+            dest_l = jnp.where(local, dest - lo * capacity, size)
+            buf = jnp.zeros((size + 1, d), xf.dtype).at[dest_l].set(xf[src], mode="drop")
+            buf = buf[:size].reshape(e_loc, capacity, d)
+            out_buf = _expert_ffn(buf, gate_w, up_w, down_w)
+            padded = jnp.concatenate([out_buf.reshape(size, d), jnp.zeros((1, d), xf.dtype)])
+            vals = padded[jnp.minimum(dest_l, size)]
+            vals = jnp.where((dest_l < size)[:, None], vals, 0.0)
+            t = xf.shape[0]
+            y = (vals.reshape(t, m.top_k, d) * weights[..., None]).sum(1)
+            y = jax.lax.psum(y, "model")  # combine expert contributions (EP)
+            aux = jax.lax.pmean(aux, tuple(mesh.shape))  # replicated scalar
+            return y, aux
+
+        y, aux = jax.shard_map(
+            shard_fn,
+            mesh=mesh,
+            in_specs=(tok_spec, P(None, None), w_spec, w_spec, wd_spec),
+            out_specs=(tok_spec, P()),
+            check_vma=False,
+        )(x_flat, params_l["router"], params_l["gate"], params_l["up"], params_l["down"])
+
+    out = y.reshape(b, s, d)
+    # shared experts (DeepSeek): a dense SwiGLU alongside the routed path
+    if m.num_shared:
+        g = x @ cast(params_l["shared_gate"])
+        u = x @ cast(params_l["shared_up"])
+        out = out + (jax.nn.silu(g) * u) @ cast(params_l["shared_down"])
+    return out, aux

@@ -1,0 +1,66 @@
+"""Batched serving engine: prefill + greedy decode with a KV cache.
+
+The read-optimized half of the framework (the paper's raison d'être):
+weights arrive through Shelby verified reads (see examples/serve_llm.py),
+then requests are batched, prefilled once and decoded step by step.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.model import build
+from repro.sharding import AxisCtx, init_params
+
+
+@dataclasses.dataclass
+class ServeStats:
+    prefill_tokens: int = 0
+    decoded_tokens: int = 0
+
+
+class ServeEngine:
+    def __init__(self, cfg: ArchConfig, params, *, ctx: AxisCtx | None = None,
+                 max_len: int = 256, long_mode: bool = False):
+        self.cfg = cfg
+        self.params = params
+        self.ctx = ctx or AxisCtx()
+        self.max_len = max_len
+        self.long_mode = long_mode
+        self.model = build(cfg)
+        self._decode = jax.jit(
+            lambda p, c, t, pos: self.model.decode_step(p, c, t, pos, self.ctx,
+                                                        long_mode=long_mode),
+            donate_argnums=(1,),
+        )
+        self.stats = ServeStats()
+
+    def _empty_cache(self, batch: int):
+        specs = self.model.cache_specs(batch, self.max_len, long_mode=self.long_mode)
+        return init_params(specs, jax.random.PRNGKey(0))
+
+    def generate(self, prompts: np.ndarray, num_tokens: int, *, frames=None) -> np.ndarray:
+        """prompts: (B, P) int32 -> (B, P + num_tokens).  Greedy decoding via
+        the decode path from position 0 (prefill-free reference flow)."""
+        b, p = prompts.shape
+        cache = self._empty_cache(b)
+        if self.cfg.is_encdec:
+            enc_out = self.model.encode(self.params, jnp.asarray(frames), self.ctx)
+            cache["enc_out"] = enc_out.astype(jnp.bfloat16)
+        out = [prompts[:, i] for i in range(p)]
+        tok = prompts[:, :1].astype(np.int32)
+        for pos in range(p + num_tokens - 1):
+            logits, cache = self._decode(self.params, cache, jnp.asarray(tok), jnp.int32(pos))
+            if pos + 1 < p:
+                tok = prompts[:, pos + 1 : pos + 2].astype(np.int32)
+            else:
+                nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
+                nxt = np.minimum(nxt, self.cfg.vocab - 1)
+                out.append(nxt)
+                tok = nxt[:, None]
+            self.stats.decoded_tokens += b
+        return np.stack(out, axis=1)

@@ -1,0 +1,197 @@
+"""Logical-axis sharding (MaxText-style rules with divisibility fallback).
+
+Every parameter / activation dimension carries a *logical* name
+(``'embed'``, ``'heads'``, ``'vocab'``, ``'batch'``, …).  A per-config rule
+table maps logical names to mesh axes.  ``logical_to_spec`` drops any
+mapping whose mesh-axis product does not divide the dimension (e.g. hymba's
+25 heads on a 16-way model axis -> replicated), which is what lets one model
+zoo serve ten architectures and three mesh layouts without per-arch
+special cases.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# -- default rule tables -------------------------------------------------------
+# TRAIN: weights TP over 'model' + FSDP over ('pod','data') on the d_model
+# axis (gathered per scanned layer); activations batch over ('pod','data').
+TRAIN_RULES: dict[str, tuple[str, ...] | None] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": ("pod", "data"),  # FSDP shard of weights' d_model dim
+    "expert_embed": ("pod", "data"),  # MoE expert weights' d_model dim
+    "embed_act": None,  # activations' d_model dim stays replicated
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": None,
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "expert_mlp": None,
+    "ssm_inner": ("model",),
+    "ssm_state": None,
+    "ssm_dt": None,
+    "layers": None,
+    "q_lora": None,
+    "kv_lora": None,
+    "conv": None,
+    "frames": None,
+    "cache_seq": None,
+    "window": None,
+}
+
+# PREFILL (compute-bound): Megatron TP over 'model' (heads/mlp/vocab),
+# weights replicated over 'data'; KV cache written out sequence-sharded.
+SERVE_RULES = dict(TRAIN_RULES)
+SERVE_RULES.update({
+    "embed": None,
+    "expert_embed": None,
+    "batch": ("pod", "data"),
+    "cache_seq": ("model",),
+    "heads": ("model",),
+})
+
+# DECODE (memory-bound, tiny activations).  §Perf-optimized default:
+# weights row-parallel over 'model' only — the original 2D ('data','model')
+# variant made XLA all-gather 400 GB of weights per step for command-r
+# (kept as the recorded baseline in results/dryrun; see EXPERIMENTS.md §Perf,
+# cr_decode_tp: collective term 8.04 s -> 0.004 s).  KV cache stays
+# sequence-sharded over 'model' with a shard_map-local update.
+DECODE_RULES = dict(TRAIN_RULES)
+DECODE_RULES.update({
+    "embed": ("model",),
+    "expert_embed": None,  # expert weights stay EP-sharded only (no re-gather)
+    "heads": None,
+    "kv_heads": None,
+    "mlp": None,
+    "vocab": ("model",),
+    "batch": ("pod", "data"),
+    "cache_seq": ("model",),
+})
+
+# long-context decode (global_batch=1): batch replicated, state TP-sharded
+LONG_RULES = dict(DECODE_RULES)
+LONG_RULES.update({"batch": None})
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Declarative parameter: shape + logical axes + init."""
+
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    dtype: Any = jnp.float32
+    init: str = "normal"  # normal | zeros | ones | scaled
+    scale: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _axis_size(mesh: Mesh, names: tuple[str, ...]) -> int:
+    return math.prod(mesh.shape[n] for n in names)
+
+
+def logical_to_spec(
+    axes: tuple[str | None, ...],
+    shape: tuple[int, ...],
+    rules: dict[str, tuple[str, ...] | None],
+    mesh: Mesh,
+) -> P:
+    """Build a PartitionSpec, dropping non-dividing or conflicting axes."""
+    used: set[str] = set()
+    parts: list[tuple[str, ...] | None] = []
+    for dim, name in zip(shape, axes):
+        entry = rules.get(name) if name else None
+        if entry is None:
+            parts.append(None)
+            continue
+        entry = tuple(a for a in entry if a in mesh.shape and a not in used)
+        if not entry or dim % _axis_size(mesh, entry) != 0:
+            parts.append(None)
+            continue
+        used.update(entry)
+        parts.append(entry if len(entry) > 1 else entry[0])
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def tree_pspecs(specs, rules, mesh):
+    """Pytree of ParamSpec -> pytree of PartitionSpec."""
+    return jax.tree.map(
+        lambda s: logical_to_spec(s.axes, s.shape, rules, mesh),
+        specs,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def tree_shardings(specs, rules, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, logical_to_spec(s.axes, s.shape, rules, mesh)),
+        specs,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def tree_shape_structs(specs, sharding_tree=None):
+    """Pytree of ParamSpec -> ShapeDtypeStruct (for .lower() without alloc)."""
+    if sharding_tree is None:
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+            specs,
+            is_leaf=lambda x: isinstance(x, ParamSpec),
+        )
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        specs,
+        sharding_tree,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def init_params(specs, key: jax.Array, dtype=None):
+    """Materialize parameters (smoke tests / real training, not dry-runs)."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for spec, k in zip(leaves, keys):
+        dt = dtype or spec.dtype
+        if spec.init == "zeros":
+            out.append(jnp.zeros(spec.shape, dt))
+        elif spec.init == "ones":
+            out.append(jnp.ones(spec.shape, dt))
+        else:
+            scale = spec.scale
+            if spec.init == "scaled" and len(spec.shape) >= 2:
+                scale = 1.0 / math.sqrt(spec.shape[-2])
+            out.append((jax.random.normal(k, spec.shape, jnp.float32) * scale).astype(dt))
+    return jax.tree.unflatten(treedef, out)
+
+
+def with_sharding_constraint(x, axes: tuple[str | None, ...], rules, mesh):
+    """Activation constraint by logical axes (no-op off-mesh)."""
+    if mesh is None:
+        return x
+    spec = logical_to_spec(axes, x.shape, rules, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+class AxisCtx:
+    """Threaded through model code so layers can annotate activations."""
+
+    def __init__(self, rules=None, mesh: Mesh | None = None, remat_policy=None):
+        self.rules = rules or TRAIN_RULES
+        self.mesh = mesh
+        self.remat_policy = remat_policy  # jax.checkpoint policy (perf knob)
+
+    def constrain(self, x, *axes):
+        if self.mesh is None:
+            return x
+        return with_sharding_constraint(x, axes, self.rules, self.mesh)

@@ -1,0 +1,88 @@
+"""User-data layout (§2.1 + Figure 2): Blobs -> Chunksets -> Chunks -> Samples.
+
+* Blob: arbitrary bytes (immutable once stored).
+* Chunkset: fixed-size slice of the blob, ~10 MiB; the last one zero-padded.
+* Chunk: one of n Clay-coded shares of a chunkset (~1 MiB at (10,6)).
+* Sample: 1 KiB slice of a chunk (audit granularity).
+
+The Clay sub-packetization (alpha sub-chunks of w bytes) forces the chunkset
+size to be a multiple of k*alpha*w; we derive w from the requested chunkset
+size and keep it 4-byte aligned so samples view cleanly as uint32 words for
+the bulk-hash kernel.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import numpy as np
+
+from repro.core.clay import ClayCode
+
+DEFAULT_CHUNKSET_BYTES = 10 * 1024 * 1024  # ~10 MiB (§2.1)
+
+
+@dataclasses.dataclass(frozen=True)
+class BlobLayout:
+    """Byte-level geometry shared by SDK, RPC nodes and SPs."""
+
+    k: int = 10
+    m: int = 6
+    chunkset_bytes_target: int = DEFAULT_CHUNKSET_BYTES
+
+    @functools.cached_property
+    def code(self) -> ClayCode:
+        return ClayCode(k=self.k, m=self.m)
+
+    @property
+    def n(self) -> int:
+        return self.k + self.m
+
+    @functools.cached_property
+    def w(self) -> int:
+        """Sub-chunk bytes: chunkset splits as (k, alpha, w)."""
+        alpha = self.code.alpha
+        raw = -(-self.chunkset_bytes_target // (self.k * alpha))  # ceil
+        return raw + (-raw % 4)  # uint32-align for sample hashing
+
+    @property
+    def chunk_bytes(self) -> int:
+        return self.code.alpha * self.w
+
+    @property
+    def chunkset_bytes(self) -> int:
+        return self.k * self.chunk_bytes
+
+    @property
+    def replication_overhead(self) -> float:
+        """Table 1's "replication overhead": stored bytes / user bytes."""
+        return self.n / self.k
+
+    # -- blob <-> chunkset framing ------------------------------------------------
+    def partition(self, data: bytes) -> list[np.ndarray]:
+        """Blob -> zero-padded chunksets, each shaped (k, alpha, w)."""
+        if len(data) == 0:
+            raise ValueError("empty blob")
+        cs_bytes = self.chunkset_bytes
+        out = []
+        for off in range(0, len(data), cs_bytes):
+            piece = np.frombuffer(data[off : off + cs_bytes], dtype=np.uint8)
+            if piece.size < cs_bytes:  # "the final Chunkset is zero-padded" (§3.6)
+                piece = np.concatenate([piece, np.zeros(cs_bytes - piece.size, np.uint8)])
+            out.append(piece.reshape(self.k, self.code.alpha, self.w))
+        return out
+
+    def num_chunksets(self, blob_len: int) -> int:
+        return -(-blob_len // self.chunkset_bytes)
+
+    def assemble(self, chunksets: list[np.ndarray], blob_len: int) -> bytes:
+        flat = np.concatenate([c.reshape(-1) for c in chunksets])
+        return flat[:blob_len].tobytes()
+
+    def byte_range_to_chunksets(self, offset: int, length: int) -> tuple[int, int]:
+        """[offset, offset+length) -> (first_chunkset, last_chunkset_inclusive)."""
+        if length <= 0:
+            raise ValueError("length must be positive")
+        first = offset // self.chunkset_bytes
+        last = (offset + length - 1) // self.chunkset_bytes
+        return first, last

@@ -1,0 +1,121 @@
+"""Repair planner (§3.3 "Flexible Repair Structure" + "Repair Coordination").
+
+Detect-and-repair for lost/corrupted chunks:
+
+* **MSR path** — when all d = n-1 helpers are alive, read only the
+  alpha/q repair-plane sub-chunks from each helper (the Clay optimum; the
+  coordination layer "allows planning for bandwidth-optimal recoveries").
+* **MDS fallback** — "when the optimal repair pattern cannot be followed,
+  Shelby can fall back to the MDS property (any k chunks recover data) even
+  if it must temporarily sacrifice repair bandwidth efficiency."
+
+The planner also re-verifies the repaired chunk against its on-chain root
+before re-dispersal, and reports exact helper-bytes-read so the repair
+bandwidth benchmark measures the real data path, not a formula.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import commitments as cm
+from repro.core.contract import ShelbyContract
+from repro.storage.blob import BlobLayout
+from repro.storage.sp import StorageProvider
+
+
+class RepairError(Exception):
+    pass
+
+
+@dataclasses.dataclass
+class RepairReport:
+    blob_id: int
+    chunkset: int
+    chunk: int
+    mode: str  # "msr" | "mds"
+    helper_bytes_read: int
+    new_sp: int
+    verified: bool
+
+
+class RepairCoordinator:
+    def __init__(self, contract: ShelbyContract, sps: dict[int, StorageProvider], layout: BlobLayout):
+        self.contract = contract
+        self.sps = sps
+        self.layout = layout
+        self.reports: list[RepairReport] = []
+
+    # -- detection (§2.4 audits / Appendix A "trivial to detect") -----------------
+    def scan_lost_chunks(self) -> list[tuple[int, int, int]]:
+        lost = []
+        for meta in self.contract.blobs.values():
+            for (cs, ck), sp_id in meta.placement.items():
+                sp = self.sps.get(sp_id)
+                if sp is None or sp.behavior.crashed or not sp.has_chunk(meta.blob_id, cs, ck):
+                    lost.append((meta.blob_id, cs, ck))
+        return lost
+
+    # -- repair ---------------------------------------------------------------------
+    def repair_chunk(self, blob_id: int, chunkset: int, chunk: int) -> RepairReport:
+        meta = self.contract.blobs[blob_id]
+        lay = self.layout
+        code = lay.code
+        helpers_alive = {}
+        for ck in range(lay.n):
+            if ck == chunk:
+                continue
+            sp = self.sps.get(meta.placement[(chunkset, ck)])
+            if sp is not None and not sp.behavior.crashed and sp.has_chunk(blob_id, chunkset, ck):
+                helpers_alive[ck] = sp
+
+        bytes_read = 0
+        if len(helpers_alive) == lay.n - 1:
+            # MSR: every helper ships only the repair-plane sub-chunks
+            ids = code.repair_subchunk_ids(chunk)
+            subs = {}
+            for ck, sp in helpers_alive.items():
+                resp = sp.serve_subchunks(blob_id, chunkset, ck, ids, payment=0.0)
+                if resp is None:
+                    raise RepairError("helper vanished mid-repair")
+                subs[ck] = resp[0]
+                bytes_read += resp[0].nbytes
+            repaired = code.repair(chunk, subs)
+            mode = "msr"
+        elif len(helpers_alive) >= lay.k:
+            # MDS fallback: full chunks from any k helpers
+            shards = {}
+            for ck, sp in list(helpers_alive.items())[: lay.k]:
+                resp = sp.serve_chunk(blob_id, chunkset, ck, payment=0.0)
+                shards[ck] = resp[0]
+                bytes_read += resp[0].nbytes
+            repaired = code.decode(shards)[chunk]
+            mode = "mds"
+        else:
+            raise RepairError(
+                f"unrecoverable: {len(helpers_alive)} helpers < k={lay.k} "
+                f"for chunk ({blob_id},{chunkset},{chunk})"
+            )
+
+        # verify against the on-chain commitment before re-dispersal
+        commit, _ = cm.commit_chunk(repaired)
+        verified = commit.root == meta.chunk_roots[(chunkset, chunk)]
+        if not verified:
+            raise RepairError("repaired chunk fails commitment check")
+
+        # place on a fresh SP (contract randomness) and store
+        old_sp = meta.placement[(chunkset, chunk)]
+        old = self.sps.get(old_sp)
+        if old is not None and not old.behavior.crashed and not old.has_chunk(blob_id, chunkset, chunk):
+            new_sp = old_sp  # same SP lost one chunk: restore in place
+        else:
+            new_sp = self.contract.reassign_chunk(blob_id, chunkset, chunk)
+        self.sps[new_sp].store_chunk(blob_id, chunkset, chunk, repaired)
+
+        report = RepairReport(blob_id, chunkset, chunk, mode, bytes_read, new_sp, verified)
+        self.reports.append(report)
+        return report
+
+    def repair_all(self) -> list[RepairReport]:
+        return [self.repair_chunk(*lost) for lost in self.scan_lost_chunks()]

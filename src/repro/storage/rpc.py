@@ -1,0 +1,151 @@
+"""RPC node (§2.3): the gateway between clients and the SP layer.
+
+Write path: verify the client's encoded chunks against the on-chain
+commitments, disperse them to the contract-assigned SPs, then mark the blob
+READY.
+
+Read path ("designed to serve"): fetch any k of n chunks per chunkset with
+**request hedging** (§3.5 — issue k + hedge requests, keep the first k valid
+responses, ignore stragglers), verify every chunk against its on-chain
+Merkle root (altered data is detected, §2.3), Clay-decode, and assemble.
+Every chunk read is paid through an RPC->SP micropayment channel; a small
+hot-cache of decoded chunksets fronts popular content (§5.3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+
+import numpy as np
+
+from repro.core import commitments as cm
+from repro.core.contract import BlobState, ShelbyContract
+from repro.core.payments import PaymentLedger
+from repro.storage.blob import BlobLayout
+from repro.storage.sp import StorageProvider
+
+
+class ReadError(Exception):
+    pass
+
+
+@dataclasses.dataclass
+class ReadStats:
+    chunks_requested: int = 0
+    chunks_used: int = 0
+    chunks_bad: int = 0
+    bytes_paid_for: int = 0
+    payments: float = 0.0
+    cache_hits: int = 0
+    hedged_wasted: int = 0
+
+
+class RPCNode:
+    def __init__(
+        self,
+        rpc_id: str,
+        contract: ShelbyContract,
+        sps: dict[int, StorageProvider],
+        layout: BlobLayout,
+        price_per_chunk: float = 1e-6,
+        hedge: int = 2,
+        cache_chunksets: int = 8,
+        sp_deposit: float = 10.0,
+    ):
+        self.rpc_id = rpc_id
+        self.contract = contract
+        self.sps = sps
+        self.layout = layout
+        self.price_per_chunk = price_per_chunk
+        self.hedge = hedge
+        self.ledger = PaymentLedger()
+        for sp_id in sps:
+            self.ledger.open(str(sp_id), sp_deposit)  # channels at join time (§2.3)
+        self._cache: OrderedDict[tuple[int, int], np.ndarray] = OrderedDict()
+        self._cache_size = cache_chunksets
+        self.stats = ReadStats()
+        contract.register_rpc(rpc_id)
+
+    # -- write path (§2.3) -------------------------------------------------------
+    def write_blob(self, meta, encoded_chunksets: list[np.ndarray]) -> None:
+        """encoded_chunksets[cs]: (n, alpha, w) — verify commitments, disperse."""
+        lay = self.layout
+        for cs, coded in enumerate(encoded_chunksets):
+            assert coded.shape[0] == lay.n
+            for ck in range(lay.n):
+                root_expected = meta.chunk_roots[(cs, ck)]
+                commit, _ = cm.commit_chunk(coded[ck])
+                if commit.root != root_expected:
+                    raise ValueError(f"commitment mismatch for chunk ({cs},{ck})")
+                sp_id = meta.placement[(cs, ck)]
+                if not self.sps[sp_id].store_chunk(meta.blob_id, cs, ck, coded[ck]):
+                    raise IOError(f"SP {sp_id} refused chunk ({cs},{ck})")
+        self.contract.mark_ready(meta.blob_id, self.rpc_id)
+
+    # -- read path (§2.3 + §3.5 hedging) ------------------------------------------
+    def _pay(self, sp_id: int) -> float:
+        self.ledger.pay(str(sp_id), self.price_per_chunk)
+        self.sps[sp_id]  # channel peer exists
+        self.stats.payments += self.price_per_chunk
+        return self.price_per_chunk
+
+    def read_chunkset(self, blob_id: int, chunkset: int) -> np.ndarray:
+        """Returns the decoded (k, alpha, w) data chunks of one chunkset."""
+        key = (blob_id, chunkset)
+        if key in self._cache:
+            self._cache.move_to_end(key)
+            self.stats.cache_hits += 1
+            return self._cache[key]
+        meta = self.contract.blobs[blob_id]
+        if meta.state is not BlobState.READY:
+            raise ReadError(f"blob {blob_id} not ready")
+        lay = self.layout
+        order = sorted(
+            range(lay.n),
+            key=lambda ck: self.sps[meta.placement[(chunkset, ck)]].behavior.latency_ms,
+        )
+        # hedging: request k + hedge chunks up-front, keep first k valid
+        to_ask = order[: min(lay.n, lay.k + self.hedge)]
+        shards: dict[int, np.ndarray] = {}
+        asked = 0
+        for ck in to_ask + [c for c in order if c not in to_ask]:
+            if len(shards) == lay.k:
+                break
+            sp = self.sps[meta.placement[(chunkset, ck)]]
+            asked += 1
+            self.stats.chunks_requested += 1
+            resp = sp.serve_chunk(blob_id, chunkset, ck, self._pay(meta.placement[(chunkset, ck)]))
+            if resp is None:
+                continue
+            data, _ = resp
+            commit, _ = cm.commit_chunk(data)
+            if commit.root != meta.chunk_roots[(chunkset, ck)]:
+                self.stats.chunks_bad += 1  # §2.3: tampering detected
+                continue
+            shards[ck] = data
+            self.stats.chunks_used += 1
+        if len(shards) < lay.k:
+            raise ReadError(
+                f"chunkset ({blob_id},{chunkset}): only {len(shards)}/{lay.k} valid chunks"
+            )
+        self.stats.hedged_wasted += asked - lay.k
+        decoded = lay.code.reconstruct_data(shards)
+        self._cache[key] = decoded
+        if len(self._cache) > self._cache_size:
+            self._cache.popitem(last=False)
+        return decoded
+
+    def read_range(self, blob_id: int, offset: int, length: int) -> bytes:
+        meta = self.contract.blobs[blob_id]
+        lay = self.layout
+        first, last = lay.byte_range_to_chunksets(offset, length)
+        buf = bytearray()
+        for cs in range(first, last + 1):
+            buf += lay.assemble([self.read_chunkset(blob_id, cs)], lay.chunkset_bytes)
+        start = offset - first * lay.chunkset_bytes
+        end = min(start + length, meta.size_bytes - first * lay.chunkset_bytes)
+        return bytes(buf[start:end])
+
+    def read_blob(self, blob_id: int) -> bytes:
+        meta = self.contract.blobs[blob_id]
+        return self.read_range(blob_id, 0, meta.size_bytes)

@@ -1,0 +1,102 @@
+"""Client SDK (§2.2): prepare data, write blobs, paid byte-range reads.
+
+Writing (Figure 2): partition the blob into ~10 MiB chunksets (zero-padding
+the last), Clay-encode each into n chunks, Merkle-commit every chunk, roll
+chunk roots into chunkset roots and a blob root, submit commitments +
+payment to the contract (placement comes back), then hand the encoded chunks
+to an RPC node to disperse and mark READY.
+
+Reading: open a client->RPC micropayment channel once, then mix signed
+micropayments with range reads (§2.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import commitments as cm
+from repro.core.contract import BlobMetadata, ShelbyContract
+from repro.core.payments import MicropaymentChannel
+from repro.storage.blob import BlobLayout
+from repro.storage.rpc import RPCNode
+
+
+@dataclasses.dataclass(frozen=True)
+class PreparedBlob:
+    """Everything Figure 2 produces before anything touches the network."""
+
+    size_bytes: int
+    encoded_chunksets: list[np.ndarray]  # each (n, alpha, w)
+    chunk_roots: dict[tuple[int, int], bytes]
+    chunk_num_samples: dict[tuple[int, int], int]
+    chunkset_roots: list[bytes]
+    blob_root: bytes
+
+
+class ShelbyClient:
+    def __init__(
+        self,
+        contract: ShelbyContract,
+        rpc: RPCNode,
+        layout: BlobLayout | None = None,
+        read_price_per_byte: float = 1e-9,
+        deposit: float = 100.0,
+    ):
+        self.contract = contract
+        self.rpc = rpc
+        self.layout = layout or rpc.layout
+        self.read_price_per_byte = read_price_per_byte
+        self.channel = MicropaymentChannel(deposit)  # client->RPC (§2.2)
+
+    # -- data preparation (Figure 2) ---------------------------------------------
+    def prepare(self, data: bytes) -> PreparedBlob:
+        lay = self.layout
+        chunksets = lay.partition(data)
+        encoded, chunk_roots, nsamples, cs_roots = [], {}, {}, []
+        for cs, plain in enumerate(chunksets):
+            coded = lay.code.encode(plain)
+            encoded.append(coded)
+            roots = []
+            for ck in range(lay.n):
+                commit, _ = cm.commit_chunk(coded[ck])
+                chunk_roots[(cs, ck)] = commit.root
+                nsamples[(cs, ck)] = commit.num_samples
+                roots.append(commit.root)
+            cs_root, _ = cm.commit_roots(roots)
+            cs_roots.append(cs_root)
+        blob_root, _ = cm.commit_roots(cs_roots)
+        return PreparedBlob(
+            size_bytes=len(data),
+            encoded_chunksets=encoded,
+            chunk_roots=chunk_roots,
+            chunk_num_samples=nsamples,
+            chunkset_roots=cs_roots,
+            blob_root=blob_root,
+        )
+
+    # -- write (§2.2) ---------------------------------------------------------------
+    def put(self, data: bytes, payment: float = 1.0, epochs: int = 10) -> BlobMetadata:
+        prep = self.prepare(data)
+        meta = self.contract.begin_write(
+            owner="client",
+            size_bytes=prep.size_bytes,
+            n=self.layout.n,
+            k=self.layout.k,
+            blob_root=prep.blob_root,
+            chunkset_roots=prep.chunkset_roots,
+            chunk_roots=prep.chunk_roots,
+            chunk_num_samples=prep.chunk_num_samples,
+            payment=payment,
+            epochs=epochs,
+        )
+        self.rpc.write_blob(meta, prep.encoded_chunksets)
+        return meta
+
+    # -- read (§2.2): payments mixed with reads --------------------------------------
+    def get(self, blob_id: int, offset: int = 0, length: int | None = None) -> bytes:
+        meta = self.contract.blobs[blob_id]
+        if length is None:
+            length = meta.size_bytes - offset
+        self.channel.pay(max(length * self.read_price_per_byte, 1e-12))
+        return self.rpc.read_range(blob_id, offset, length)

@@ -1,0 +1,184 @@
+"""Storage-provider node simulation (§2.4).
+
+An SP stores assigned chunks, serves *paid* chunk reads, answers audit
+challenges with Merkle possession proofs, audits peers (recording a
+scoreboard and retaining proofs for two epochs — §4.1), and can misbehave
+in every way the paper's adversary model contemplates:
+
+* ``crashed``           — stops answering (availability fault)
+* ``drop_fraction``     — silently deletes a fraction of assigned chunks
+                          (the §5.4 "fake storage" adversary)
+* ``corrupt``           — serves bit-flipped data (detected via commitments)
+* ``lazy_auditor``      — reports '1' without verifying / without retaining
+                          proofs (the audit-the-auditor target, Thm 2)
+* ``latency_ms``        — per-request latency for hedging/straggler tests
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+
+import numpy as np
+
+from repro.core import commitments as cm
+from repro.core.audit import Challenge, Scoreboard
+from repro.core.contract import ShelbyContract
+
+
+@dataclasses.dataclass
+class SPBehavior:
+    crashed: bool = False
+    drop_fraction: float = 0.0
+    corrupt: bool = False
+    lazy_auditor: bool = False
+    retain_proofs: bool = True
+    latency_ms: float = 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class AuditProof:
+    """What an auditee broadcasts (§4.1): the sample + its Merkle proof."""
+
+    auditee: int
+    blob_id: int
+    chunkset: int
+    chunk: int
+    sample_index: int
+    sample: bytes
+    proof: cm.MerkleProof
+
+
+class StorageProvider:
+    def __init__(self, sp_id: int, behavior: SPBehavior | None = None, tree_cache: int = 256):
+        self.sp_id = sp_id
+        self.behavior = behavior or SPBehavior()
+        self._chunks: dict[tuple[int, int, int], np.ndarray] = {}
+        self._trees: OrderedDict[tuple[int, int, int], cm.MerkleTree] = OrderedDict()
+        self._tree_cache = tree_cache
+        self._rng = np.random.default_rng(sp_id * 7919 + 13)
+        # auditor state
+        self.scoreboard = Scoreboard(owner=sp_id)
+        self.retained: dict[tuple[int, int], AuditProof] = {}  # (auditee,pos)->proof
+        self.earned_reads = 0.0
+
+    # -- write path -------------------------------------------------------------
+    def store_chunk(self, blob_id: int, chunkset: int, chunk: int, data: np.ndarray) -> bool:
+        if self.behavior.crashed:
+            return False
+        key = (blob_id, chunkset, chunk)
+        if self.behavior.drop_fraction > 0 and self._rng.random() < self.behavior.drop_fraction:
+            # pretends to store (acks) but drops the bytes — §5.4 adversary
+            return True
+        self._chunks[key] = np.array(data, dtype=np.uint8)
+        return True
+
+    def has_chunk(self, blob_id: int, chunkset: int, chunk: int) -> bool:
+        return (blob_id, chunkset, chunk) in self._chunks
+
+    def stored_chunks(self) -> int:
+        return len(self._chunks)
+
+    def _tree(self, key: tuple[int, int, int]) -> cm.MerkleTree:
+        if key in self._trees:
+            self._trees.move_to_end(key)
+            return self._trees[key]
+        _, tree = cm.commit_chunk(self._chunks[key])
+        self._trees[key] = tree
+        if len(self._trees) > self._tree_cache:
+            self._trees.popitem(last=False)
+        return tree
+
+    # -- read path (paid, §2.4) ----------------------------------------------------
+    def serve_chunk(self, blob_id: int, chunkset: int, chunk: int, payment: float):
+        """Returns (chunk_bytes, latency_ms) or None."""
+        if self.behavior.crashed:
+            return None
+        key = (blob_id, chunkset, chunk)
+        if key not in self._chunks:
+            return None
+        self.earned_reads += payment
+        data = self._chunks[key]
+        if self.behavior.corrupt:
+            data = data.copy()
+            data.reshape(-1)[0] ^= 0xFF
+        return data, self.behavior.latency_ms
+
+    def serve_subchunks(self, blob_id: int, chunkset: int, chunk: int, ids: list[int], payment: float):
+        """MSR repair helper read: only the requested sub-chunks (planes)."""
+        if self.behavior.crashed:
+            return None
+        key = (blob_id, chunkset, chunk)
+        if key not in self._chunks:
+            return None
+        self.earned_reads += payment
+        return self._chunks[key][ids], self.behavior.latency_ms
+
+    # -- auditee role (§4.1) ---------------------------------------------------------
+    def respond_challenge(self, ch: Challenge) -> AuditProof | None:
+        if self.behavior.crashed:
+            return None
+        key = (ch.blob_id, ch.chunkset, ch.chunk)
+        if key not in self._chunks:
+            return None  # cannot fabricate a valid Merkle proof (§4.4)
+        tree = self._tree(key)
+        samples = cm.chunk_samples(self._chunks[key])
+        idx = ch.sample % len(samples)
+        return AuditProof(
+            auditee=self.sp_id,
+            blob_id=ch.blob_id,
+            chunkset=ch.chunkset,
+            chunk=ch.chunk,
+            sample_index=idx,
+            sample=samples[idx],
+            proof=tree.prove(idx),
+        )
+
+    # -- auditor role (§4.1) ----------------------------------------------------------
+    def audit_peer(self, ch: Challenge, proof: AuditProof | None, contract: ShelbyContract):
+        """Verify a broadcast proof, record the outcome, retain the proof."""
+        if self.behavior.lazy_auditor:
+            # rational deviation candidate: blind '1', no verification
+            self.scoreboard.record(ch.auditee, True)
+            if self.behavior.retain_proofs and proof is not None:
+                self._retain(ch.auditee, proof)
+            return
+        ok = (
+            proof is not None
+            and proof.sample_index == proof.proof.index
+            and contract.verify_possession_proof(
+                ch.blob_id, ch.chunkset, ch.chunk, proof.sample, proof.proof
+            )
+        )
+        self.scoreboard.record(ch.auditee, ok)
+        if ok and self.behavior.retain_proofs:
+            self._retain(ch.auditee, proof)
+        if proof is not None and not ok:
+            # provably invalid proof -> submit slashing evidence (§4.2)
+            contract.submit_evidence(
+                self.sp_id, ch.auditee, ch.blob_id, ch.chunkset, ch.chunk,
+                proof.sample, proof.proof,
+            )
+
+    def _retain(self, auditee: int, proof: AuditProof):
+        pos = sum(1 for (a, _) in self.retained if a == auditee)
+        # position = index among THIS auditor's recorded entries for auditee
+        pos = len([1 for b in self.scoreboard.bits.get(auditee, [])]) - 1
+        self.retained[(auditee, pos)] = proof
+
+    def reproduce_proof(self, auditee: int, position: int):
+        """Audit-the-auditor response (§4.2)."""
+        p = self.retained.get((auditee, position))
+        if p is None:
+            return None
+        return (p.blob_id, p.chunkset, p.chunk, p.sample, p.proof)
+
+    # -- failure injection --------------------------------------------------------------
+    def crash(self):
+        self.behavior.crashed = True
+
+    def recover(self):
+        self.behavior.crashed = False
+
+    def wipe(self):
+        self._chunks.clear()
+        self._trees.clear()

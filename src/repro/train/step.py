@@ -1,0 +1,90 @@
+"""train_step / serve_step builders — the functions the dry-run lowers.
+
+``make_train_step`` returns a pure (state, batch) -> (state, metrics)
+function with microbatched gradient accumulation (lax.scan over microbatches
+keeps activation memory at one-microbatch high-water) and AdamW/ZeRO-1.
+
+``make_prefill_step`` / ``make_decode_step`` are the serving entry points.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.model import build
+from repro.sharding import AxisCtx
+from repro.train import optimizer as opt
+
+
+def make_loss_fn(cfg: ArchConfig, ctx: AxisCtx):
+    model = build(cfg)
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch, ctx)
+
+    return loss_fn
+
+
+def make_train_step(cfg: ArchConfig, ctx: AxisCtx, adamw: opt.AdamWConfig | None = None,
+                    num_microbatches: int = 1, shard_grad_accum: bool = False):
+    adamw = adamw or opt.AdamWConfig()
+    loss_fn = make_loss_fn(cfg, ctx)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    constrain = lambda tree: tree
+    if shard_grad_accum and ctx.mesh is not None:
+        # force the accumulated grads onto the params' (FSDP x TP) sharding:
+        # XLA then reduce-scatters each microbatch instead of all-reducing
+        # full gradients num_microbatches times (see EXPERIMENTS.md section Perf)
+        from repro.sharding import tree_shardings
+
+        shardings = tree_shardings(build(cfg).param_specs(), ctx.rules, ctx.mesh)
+
+        def constrain(tree):
+            return jax.tree.map(jax.lax.with_sharding_constraint, tree, shardings)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if num_microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            def split(x):
+                return x.reshape((num_microbatches, x.shape[0] // num_microbatches) + x.shape[1:])
+
+            mbs = jax.tree.map(split, batch)
+
+            def mb_step(acc, mb):
+                (l, _), g = grad_fn(params, mb)
+                acc = constrain(jax.tree.map(jnp.add, acc, g))
+                return acc, l
+
+            zero = constrain(jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+            grads, losses = jax.lax.scan(mb_step, zero, mbs)
+            grads = jax.tree.map(lambda g: g / num_microbatches, grads)
+            loss = losses.mean()
+            metrics = {}
+        new_state, opt_metrics = opt.update(state, grads, adamw)
+        return new_state, {"loss": loss, **opt_metrics}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, ctx: AxisCtx):
+    model = build(cfg)
+
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, ctx)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, ctx: AxisCtx, *, long_mode: bool = False):
+    model = build(cfg)
+
+    def decode_step(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos, ctx, long_mode=long_mode)
+
+    return decode_step

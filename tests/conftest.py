@@ -1,0 +1,32 @@
+import numpy as np
+import pytest
+
+from repro.core.contract import ShelbyContract
+from repro.core.placement import SPInfo
+from repro.storage.blob import BlobLayout
+from repro.storage.rpc import RPCNode
+from repro.storage.sdk import ShelbyClient
+from repro.storage.sp import StorageProvider
+
+
+@pytest.fixture
+def small_layout():
+    return BlobLayout(k=4, m=2, chunkset_bytes_target=64 * 1024)
+
+
+@pytest.fixture
+def cluster(small_layout):
+    """(contract, sps, rpc, client) with 8 healthy SPs across 3 DCs."""
+    contract = ShelbyContract()
+    sps = {}
+    for i in range(8):
+        contract.register_sp(SPInfo(sp_id=i, stake=1000.0, dc=f"dc{i % 3}", rack=f"r{i % 4}"))
+        sps[i] = StorageProvider(i)
+    rpc = RPCNode("rpc0", contract, sps, small_layout, cache_chunksets=16)
+    client = ShelbyClient(contract, rpc, deposit=1e9)
+    return contract, sps, rpc, client
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

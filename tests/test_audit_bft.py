@@ -1,0 +1,64 @@
+"""BFT properties of audit-score aggregation (§4.3, hypothesis)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.audit import aggregate_scores, trim_f
+
+
+@given(
+    st.integers(4, 30),  # number of SPs
+    st.floats(0.0, 1.0),  # honest rate for target SP j
+    st.integers(0, 2**31),
+)
+@settings(max_examples=60, deadline=None)
+def test_trimmed_score_within_honest_range(n, true_rate, seed):
+    """With f < n/3 Byzantine raters, score_j stays within [min,max] of
+    honest evaluations — Byzantine raters cannot drag it outside."""
+    rng = np.random.default_rng(seed)
+    f = trim_f(n - 1)
+    target = 0
+    honest_noise = rng.uniform(-0.05, 0.05, n - 1 - f)
+    honest_evals = np.clip(true_rate + honest_noise, 0.0, 1.0)
+    byz_evals = rng.choice([0.0, 1.0], f)  # worst-case liars
+    rates = {}
+    raters = [i for i in range(1, n)]
+    for i, r in zip(raters[: len(honest_evals)], honest_evals):
+        rates[i] = {target: float(r)}
+    for i, r in zip(raters[len(honest_evals):], byz_evals):
+        rates[i] = {target: float(r)}
+    scores = aggregate_scores(rates, sp_ids=list(range(n)))
+    lo, hi = honest_evals.min(), honest_evals.max()
+    assert lo - 1e-9 <= scores[target] <= hi + 1e-9
+
+
+@given(st.integers(4, 20), st.integers(0, 2**31))
+@settings(max_examples=40, deadline=None)
+def test_honest_sp_scores_high(n, seed):
+    """All-honest population: every SP scores ~1."""
+    rng = np.random.default_rng(seed)
+    rates = {i: {j: 1.0 for j in range(n) if j != i} for i in range(n)}
+    scores = aggregate_scores(rates, sp_ids=list(range(n)))
+    assert all(s == 1.0 for s in scores.values())
+
+
+def test_faulty_sp_cannot_inflate():
+    """A faulty SP rated 0 by all honest peers scores 0 even if f colluders
+    rate it 1."""
+    n = 10
+    f = trim_f(n - 1)
+    rates = {}
+    for i in range(1, n):
+        rates[i] = {0: 1.0 if i <= f else 0.0}
+    scores = aggregate_scores(rates, sp_ids=list(range(n)))
+    assert scores[0] == 0.0
+
+
+def test_no_evaluations_defaults_to_one():
+    scores = aggregate_scores({}, sp_ids=[0, 1])
+    assert scores == {0: 1.0, 1: 1.0}
+
+
+def test_self_ratings_ignored():
+    rates = {0: {0: 1.0}, 1: {0: 0.0}, 2: {0: 0.0}, 3: {0: 0.0}}
+    scores = aggregate_scores(rates, sp_ids=[0, 1, 2, 3])
+    assert scores[0] == 0.0  # own 1.0 never counted

@@ -1,0 +1,111 @@
+"""Empirical incentive-compatibility checks (Theorems 1-3 + §5.4 bounds)."""
+import pytest
+
+from repro.core import economics as E
+from repro.core.audit import AuditParams
+from repro.core.simulation import SimResult, honest_population, run_sim
+from repro.storage.sp import SPBehavior
+
+PARAMS = AuditParams(p_a=0.5, auditors_per_audit=4, C=50, p_ata=0.3)
+
+
+def _with_deviant(n: int, behavior: SPBehavior) -> dict[int, SPBehavior]:
+    pop = honest_population(n)
+    pop[0] = behavior
+    return pop
+
+
+class TestTheorem1HonestIsNash:
+    """No unilateral deviation from the honest profile improves utility."""
+
+    N = 10
+
+    @pytest.fixture(scope="class")
+    def honest_result(self) -> SimResult:
+        return run_sim(honest_population(self.N), params=PARAMS, epochs=2)
+
+    @pytest.mark.parametrize("deviation", [
+        SPBehavior(drop_fraction=0.3),  # fake 30% of storage
+        SPBehavior(drop_fraction=1.0),  # store nothing
+        SPBehavior(lazy_auditor=True, retain_proofs=False),  # blind 1s, no proofs
+        SPBehavior(crashed=True),  # do nothing at all
+    ])
+    def test_deviation_not_profitable(self, honest_result, deviation):
+        dev = run_sim(_with_deviant(self.N, deviation), params=PARAMS, epochs=2)
+        assert dev.utility(0) < honest_result.utility(0), (
+            f"deviation {deviation} profits: {dev.utility(0):.2f} >= "
+            f"{honest_result.utility(0):.2f}"
+        )
+
+    def test_honest_sps_score_high_and_unslashed(self, honest_result):
+        assert all(s >= 0.99 for s in honest_result.scores.values())
+        assert all(v == 0 for v in honest_result.slashed.values())
+        assert not honest_result.ejected
+
+
+class TestTheorem2MutualDishonestyNotNash:
+    """All-dishonest: each SP stores nothing and blindly reports success.
+    Per-'1' expected utility is negative (p_ata*S_ata >> rwd_au), so a
+    deviator that abstains from false reporting does strictly better."""
+
+    N = 9
+
+    def test_dishonest_lose_and_deviation_improves(self):
+        dishonest = {i: SPBehavior(drop_fraction=1.0, lazy_auditor=True,
+                                   retain_proofs=False) for i in range(self.N)}
+        all_bad = run_sim(dishonest, params=PARAMS, epochs=2)
+        # the mutual-dishonesty payoff is strongly negative (ATA slashing)
+        assert all_bad.utility(0) < 0
+        # deviator: still stores nothing, but doesn't file false reports
+        deviant = dict(dishonest)
+        deviant[0] = SPBehavior(drop_fraction=1.0, crashed=True)
+        dev = run_sim(deviant, params=PARAMS, epochs=2)
+        assert dev.utility(0) > all_bad.utility(0)
+
+    def test_ata_calibration_inequality(self):
+        """S_ata >= rwd_au / (p_ata * eps) (§5.4-4) holds for defaults."""
+        p = PARAMS
+        assert p.S_ata >= E.min_ata_slashing(p.rwd_au, p.p_ata, p.eps)
+
+
+class TestTheorem3CoalitionResistance:
+    """A coalition of f < n/3 SPs rating each other perfectly cannot lift a
+    misbehaving member's trimmed score or meaningfully raise group utility."""
+
+    N = 10  # f = 3
+
+    def test_coalition_cannot_shield_member(self):
+        pop = honest_population(self.N)
+        pop[0] = SPBehavior(drop_fraction=1.0, lazy_auditor=True)  # shielded member
+        pop[1] = SPBehavior(lazy_auditor=True)  # colluders report 1 for everyone
+        pop[2] = SPBehavior(lazy_auditor=True)
+        res = run_sim(pop, params=PARAMS, epochs=2)
+        honest = run_sim(honest_population(self.N), params=PARAMS, epochs=2)
+        # the misbehaving member's score collapses despite f-1 friendly raters
+        assert res.scores.get(0, 1.0) < 0.7 or 0 in res.ejected
+        coalition_dev = sum(res.utility(i) for i in (0, 1, 2))
+        coalition_honest = sum(honest.utility(i) for i in (0, 1, 2))
+        assert coalition_dev < coalition_honest + 1e-6
+
+
+class TestSection54Calibration:
+    def test_paper_pa_bound(self):
+        assert E.min_audit_probability(E.CostModel()) == pytest.approx(0.0076, abs=1e-4)
+
+    def test_paper_detection_probability(self):
+        assert E.detection_probability(0.1, 50) == pytest.approx(0.632, abs=1e-3)
+        assert E.detection_probability(0.1, 50) > 0.63  # the paper's claim
+
+    def test_lemma1_retention_rational(self):
+        cm = E.CostModel()
+        p_a = 0.008  # just above the bound
+        assert E.retrieval_strategy_cost(p_a, cm) >= E.storage_strategy_cost(cm)
+
+    def test_fee_split_normalization(self):
+        n_a = E.audits_per_gb_month(0.05, 1024, 4, 30)
+        rwd_st = E.fee_split(W=0.023, n_a=n_a, rwd_au=1e-9)
+        assert 0 < rwd_st < 0.023
+
+    def test_fake_storage_slashing_bound_positive(self):
+        s = E.fake_storage_slashing_bound(0.05, 1.0, 0.1, 1000, 50)
+        assert s > 0

@@ -1,0 +1,114 @@
+"""Clay code properties: systematic, MDS (any k of n), optimal repair."""
+import itertools
+import random
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.clay import ClayCode
+from repro.core.rs import MDSCode
+
+PARAMS = [(2, 2), (4, 2), (3, 3), (4, 3), (6, 3), (10, 6)]
+
+
+def _codeword(k, m, w=6, seed=0):
+    code = ClayCode(k=k, m=m)
+    rng = np.random.default_rng(seed)
+    data = rng.integers(0, 256, (k, code.alpha, w), dtype=np.uint8)
+    return code, data, code.encode(data)
+
+
+@pytest.mark.parametrize("k,m", PARAMS)
+def test_systematic(k, m):
+    code, data, cw = _codeword(k, m)
+    assert np.array_equal(cw[:k], data)
+
+
+@pytest.mark.parametrize("k,m", [(2, 2), (4, 2), (3, 3)])
+def test_mds_exhaustive(k, m):
+    """EVERY k-subset of the n chunks reconstructs the data."""
+    code, data, cw = _codeword(k, m)
+    for subset in itertools.combinations(range(code.n), k):
+        rec = code.reconstruct_data({i: cw[i] for i in subset})
+        assert np.array_equal(rec, data), subset
+
+
+@pytest.mark.parametrize("k,m", [(4, 3), (6, 3), (10, 6)])
+def test_mds_sampled(k, m):
+    code, data, cw = _codeword(k, m)
+    r = random.Random(42)
+    for _ in range(12):
+        subset = r.sample(range(code.n), k)
+        rec = code.reconstruct_data({i: cw[i] for i in subset})
+        assert np.array_equal(rec, data), subset
+
+
+@pytest.mark.parametrize("k,m", PARAMS)
+def test_decode_with_extra_shards(k, m):
+    code, data, cw = _codeword(k, m)
+    full = code.decode({i: cw[i] for i in range(code.n)})
+    assert np.array_equal(full, cw)
+
+
+@pytest.mark.parametrize("k,m", PARAMS)
+def test_repair_every_node(k, m):
+    """Single-node repair from repair-plane sub-chunks only, for all nodes."""
+    code, data, cw = _codeword(k, m)
+    ids = None
+    for failed in range(code.n):
+        ids = code.repair_subchunk_ids(failed)
+        assert len(ids) == code.alpha // code.q  # alpha/q sub-chunks per helper
+        helpers = {i: cw[i][ids] for i in range(code.n) if i != failed}
+        rep = code.repair(failed, helpers)
+        assert np.array_equal(rep, cw[failed]), failed
+
+
+@pytest.mark.parametrize("k,m", PARAMS)
+def test_repair_bandwidth_optimal(k, m):
+    """MSR: clay repair reads (n-1)/(k*q) of what RS reads; always less for q>1."""
+    code = ClayCode(k=k, m=m)
+    rs = MDSCode(n=code.n, k=k)
+    chunk = code.alpha * 8
+    clay_bw = code.repair_bandwidth_bytes(chunk)
+    rs_bw = rs.repair_bandwidth_bytes(chunk)
+    assert clay_bw == (code.n - 1) * chunk // code.q
+    if code.q > 1:
+        assert clay_bw < rs_bw
+
+
+def test_paper_production_code_saving():
+    """(10,6): 75% repair-bandwidth saving >= the paper's '60% less than RS'."""
+    code = ClayCode(k=10, m=6)
+    chunk = code.alpha * 16
+    saving = 1 - code.repair_bandwidth_bytes(chunk) / MDSCode(n=16, k=10).repair_bandwidth_bytes(chunk)
+    assert saving >= 0.60
+    assert abs(saving - 0.75) < 1e-9
+
+
+def test_replication_overhead_below_2x():
+    assert ClayCode(k=10, m=6).n / 10 == 1.6 < 2.0  # Table 1 claim
+
+
+@given(st.integers(2, 4), st.integers(2, 3), st.integers(0, 1000))
+@settings(max_examples=15, deadline=None)
+def test_roundtrip_random_params(k, m, seed):
+    code, data, cw = _codeword(k, m, w=4, seed=seed)
+    r = random.Random(seed)
+    erased = set(r.sample(range(code.n), m))
+    shards = {i: cw[i] for i in range(code.n) if i not in erased}
+    assert np.array_equal(code.decode(shards), cw)
+
+
+def test_too_few_shards_raises():
+    code, data, cw = _codeword(4, 2)
+    with pytest.raises(ValueError):
+        code.decode({0: cw[0], 1: cw[1], 2: cw[2]})
+
+
+def test_repair_needs_all_helpers():
+    code, data, cw = _codeword(4, 2)
+    ids = code.repair_subchunk_ids(0)
+    helpers = {i: cw[i][ids] for i in range(1, code.n - 1)}  # one missing
+    with pytest.raises(ValueError):
+        code.repair(0, helpers)

@@ -1,0 +1,65 @@
+"""Merkle vector-commitment properties (§3.4)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import commitments as cm
+
+
+@given(st.lists(st.binary(min_size=1, max_size=64), min_size=1, max_size=40))
+@settings(max_examples=40, deadline=None)
+def test_prove_verify_roundtrip(leaves):
+    tree = cm.MerkleTree(leaves)
+    for i, leaf in enumerate(leaves):
+        assert cm.verify(tree.root, leaf, tree.prove(i))
+
+
+def test_wrong_leaf_fails():
+    tree = cm.MerkleTree([b"a", b"b", b"c"])
+    proof = tree.prove(1)
+    assert not cm.verify(tree.root, b"x", proof)
+
+
+def test_wrong_index_fails():
+    tree = cm.MerkleTree([b"a", b"b", b"c", b"d"])
+    p1 = tree.prove(1)
+    bad = cm.MerkleProof(index=2, path=p1.path)
+    assert not cm.verify(tree.root, b"b", bad)
+
+
+def test_any_bit_flip_detected(rng):
+    chunk = rng.integers(0, 256, (16, 64), dtype=np.uint8)
+    commit, tree = cm.commit_chunk(chunk)
+    samples = cm.chunk_samples(chunk)
+    # tamper one byte of one sample
+    tampered = bytearray(samples[0])
+    tampered[10] ^= 1
+    assert not cm.verify(commit.root, bytes(tampered), tree.prove(0))
+
+
+def test_chunk_commit_deterministic(rng):
+    chunk = rng.integers(0, 256, (8, 513), dtype=np.uint8)
+    c1, _ = cm.commit_chunk(chunk)
+    c2, _ = cm.commit_chunk(chunk.copy())
+    assert c1.root == c2.root
+
+
+def test_samples_are_1kib(rng):
+    chunk = rng.integers(0, 256, 5000, dtype=np.uint8)
+    samples = cm.chunk_samples(chunk)
+    assert all(len(s) == cm.SAMPLE_BYTES for s in samples)
+    joined = b"".join(samples)
+    assert joined[:5000] == chunk.tobytes()
+
+
+def test_bulk_digests_match_shape(rng):
+    samples = rng.integers(0, 256, (33, cm.SAMPLE_BYTES), dtype=np.uint8)
+    d = cm.bulk_sample_digests(samples)
+    assert d.shape == (33,) and d.dtype == np.uint32
+    assert len(np.unique(d)) == 33  # distinct samples -> distinct digests
+
+
+def test_proof_size_logarithmic():
+    leaves = [bytes([i % 256]) for i in range(1024)]
+    tree = cm.MerkleTree(leaves)
+    assert len(tree.prove(0).path) == 10  # log2(1024)

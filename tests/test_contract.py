@@ -1,0 +1,92 @@
+"""Coordination-layer (smart contract) behaviour (§2.5)."""
+import numpy as np
+import pytest
+
+from repro.core.contract import BlobState, ShelbyContract
+from repro.core.placement import SPInfo, assign_chunkset
+from hypothesis import given, settings, strategies as st
+
+
+def test_write_requires_payment(cluster, rng):
+    contract, _, _, client = cluster
+    with pytest.raises(ValueError):
+        client.put(b"data", payment=0.0)
+
+
+def test_blob_lifecycle(cluster, rng):
+    contract, _, rpc, client = cluster
+    meta = client.put(rng.integers(0, 256, 100_000, dtype=np.uint8).tobytes())
+    assert meta.state is BlobState.READY
+    assert contract.blobs[meta.blob_id].paid_epochs == 10
+    assert contract.treasury > 0
+
+
+def test_epoch_seed_deterministic_and_distinct():
+    c = ShelbyContract()
+    assert c.epoch_seed(5) == c.epoch_seed(5)
+    assert c.epoch_seed(5) != c.epoch_seed(6)
+
+
+def test_holdings_reflect_placement(cluster, rng):
+    contract, _, _, client = cluster
+    meta = client.put(rng.integers(0, 256, 150_000, dtype=np.uint8).tobytes())
+    held = contract.holdings()
+    keys = {(b, cs, ck) for (_, b, cs, ck, _) in held}
+    assert {(meta.blob_id, cs, ck) for (cs, ck) in meta.placement} <= keys
+
+
+def test_reassign_chunk_avoids_current_holders(cluster, rng):
+    contract, _, _, client = cluster
+    meta = client.put(rng.integers(0, 256, 100_000, dtype=np.uint8).tobytes())
+    current = {meta.placement[(0, ck)] for ck in range(meta.n)}
+    new_sp = contract.reassign_chunk(meta.blob_id, 0, 0)
+    assert new_sp not in (current - {meta.placement[(0, 0)]})
+
+
+def test_slashing_ejects_at_zero_stake():
+    c = ShelbyContract()
+    c.register_sp(SPInfo(sp_id=0, stake=50.0))
+    c._slash(0, 60.0)
+    assert 0 in c.ejected
+
+
+def test_evidence_rejected_for_valid_proof(cluster, rng):
+    """Honest SPs are safe: valid proofs can't be used as slashing evidence."""
+    contract, sps, _, client = cluster
+    meta = client.put(rng.integers(0, 256, 100_000, dtype=np.uint8).tobytes())
+    sp_id = meta.placement[(0, 0)]
+    from repro.core.audit import Challenge
+
+    ch = Challenge(0, sp_id, meta.blob_id, 0, 0, 0, ())
+    proof = sps[sp_id].respond_challenge(ch)
+    ok = contract.submit_evidence(1, sp_id, meta.blob_id, 0, 0, proof.sample, proof.proof)
+    assert not ok
+    assert contract.stakes[sp_id] == 1000.0  # unslashed
+
+
+def test_sp_must_stake():
+    c = ShelbyContract()
+    with pytest.raises(ValueError):
+        c.register_sp(SPInfo(sp_id=0, stake=0.0))
+
+
+@given(st.integers(6, 30), st.integers(2, 6), st.integers(0, 10_000))
+@settings(max_examples=30, deadline=None)
+def test_placement_properties(num_sps, n, seed):
+    """Placement: n distinct SPs, deterministic in the seed, max DC spread."""
+    sps = [SPInfo(sp_id=i, stake=1.0, dc=f"dc{i % 3}", rack=f"r{i % 4}") for i in range(num_sps)]
+    if num_sps < n:
+        return
+    a1 = assign_chunkset(seed.to_bytes(4, "little"), 1, 0, sps, n)
+    a2 = assign_chunkset(seed.to_bytes(4, "little"), 1, 0, sps, n)
+    assert a1 == a2  # deterministic in the public randomness
+    assert len(set(a1)) == n  # distinct SPs
+    dcs_used = {sps[i].dc for i in a1}
+    assert len(dcs_used) == min(n, 3)  # max failure-domain spread
+
+
+def test_placement_respects_capacity():
+    sps = [SPInfo(sp_id=i, stake=1.0, capacity_chunks=1) for i in range(4)]
+    used = {0: 1, 1: 1, 2: 1}  # three SPs full
+    with pytest.raises(ValueError):
+        assign_chunkset(b"s", 0, 0, sps, n=2, used=used)

@@ -1,0 +1,39 @@
+"""Appendix A closed forms reproduce the paper's numbers exactly."""
+import math
+
+import pytest
+
+from repro.core import durability as D
+
+
+def test_paper_data_loss_number():
+    p = D.DurabilityParams()  # the appendix's (10,6) worked example
+    assert D.p_data_loss(p) == pytest.approx(3.01e-12, rel=0.01)
+
+
+def test_eleven_nines():
+    assert D.durability_nines(D.DurabilityParams()) > 11
+
+
+def test_paper_availability_number():
+    p = D.DurabilityParams()
+    assert D.p_unavailable(p) == pytest.approx(1.35e-4, rel=0.01)
+    assert D.availability(p) == pytest.approx(0.999865, abs=1e-6)
+
+
+def test_dc_quorum_formula():
+    # 1 - [0.98^5 + 5*0.98^4*0.02 + 10*0.98^3*0.02^2] from the appendix
+    expect = 1 - (0.98**5 + 5 * 0.98**4 * 0.02 + 10 * 0.98**3 * 0.02**2)
+    assert D.p_fewer_than_k_dcs(5, 0.98, 3) == pytest.approx(expect)
+
+
+def test_durability_improves_with_more_parity():
+    base = D.p_data_loss(D.DurabilityParams(k=10, m=4))
+    more = D.p_data_loss(D.DurabilityParams(k=10, m=6))
+    assert more < base
+
+
+def test_durability_worsens_with_slow_detection():
+    fast = D.p_data_loss(D.DurabilityParams(mttd_hours=1))
+    slow = D.p_data_loss(D.DurabilityParams(mttd_hours=240))
+    assert slow > fast

@@ -1,0 +1,215 @@
+"""Per-arch smoke tests (reduced configs) + decode/forward consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ALL_ARCHS, get, get_smoke
+from repro.configs.base import SHAPES, cell_applicable
+from repro.models.model import build
+from repro.sharding import AxisCtx, init_params
+
+KEY = jax.random.PRNGKey(0)
+CTX = AxisCtx()
+B, S = 2, 24
+
+
+def _batch(cfg, rng, b=B, s=S):
+    if cfg.is_encdec:
+        return {"frames": rng.normal(size=(b, cfg.enc_seq, cfg.d_model)).astype(np.float32),
+                "tokens": rng.integers(0, cfg.vocab, (b, s)).astype(np.int32),
+                "labels": rng.integers(0, cfg.vocab, (b, s)).astype(np.int32)}
+    if cfg.input_mode == "embeddings":
+        return {"embeddings": rng.normal(size=(b, s, cfg.d_model)).astype(np.float32),
+                "labels": rng.integers(0, cfg.vocab, (b, s)).astype(np.int32)}
+    return {"tokens": rng.integers(0, cfg.vocab, (b, s)).astype(np.int32),
+            "labels": rng.integers(0, cfg.vocab, (b, s)).astype(np.int32)}
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_forward_train_step(arch, rng):
+    """Reduced config: one forward + one train step, shapes + no NaNs."""
+    from repro.train.step import make_train_step
+    from repro.train.optimizer import init_state
+
+    cfg = get_smoke(arch)
+    model = build(cfg)
+    params = init_params(model.param_specs(), KEY)
+    batch = _batch(cfg, rng)
+    loss, metrics = jax.jit(lambda p, b: model.loss(p, b, CTX))(params, batch)
+    assert np.isfinite(float(loss))
+    step = jax.jit(make_train_step(cfg, CTX, num_microbatches=2))
+    state, m2 = step(init_state(params), batch)
+    assert np.isfinite(float(m2["loss"]))
+    assert int(state["step"]) == 1
+    # a step must actually change the parameters
+    leaf0 = jax.tree.leaves(params)[0]
+    leaf1 = jax.tree.leaves(state["params"])[0]
+    assert not np.array_equal(np.asarray(leaf0), np.asarray(leaf1))
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_decode_shapes(arch, rng):
+    cfg = get_smoke(arch)
+    model = build(cfg)
+    params = init_params(model.param_specs(), KEY)
+    cache = init_params(model.cache_specs(B, 16), KEY)
+    toks = rng.integers(0, cfg.vocab, (B, 1)).astype(np.int32)
+    logits, nc = jax.jit(
+        lambda p, c, t: model.decode_step(p, c, t, jnp.int32(2), CTX)
+    )(params, cache, toks)
+    assert logits.shape == (B, 1, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    assert jax.tree.structure(nc) == jax.tree.structure(cache)
+
+
+@pytest.mark.parametrize("arch", ["granite-8b", "starcoder2-3b", "yi-9b",
+                                  "command-r-plus-104b", "qwen3-moe-30b-a3b",
+                                  "deepseek-v2-lite-16b", "falcon-mamba-7b",
+                                  "hymba-1.5b"])
+def test_decode_matches_prefill(arch, rng):
+    """Greedy decode from scratch must agree with a fresh prefill at every
+    prefix — the KV-cache/decode path is numerically consistent with the
+    full forward."""
+    import dataclasses
+
+    cfg = get_smoke(arch)
+    if cfg.moe is not None:
+        # capacity drops are batch-shape-dependent (GShard semantics); make
+        # both paths drop-free so this tests the attention/MLA cache math
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=100.0))
+    model = build(cfg)
+    params = init_params(model.param_specs(), KEY)
+    t = 6
+    toks = rng.integers(0, cfg.vocab, (B, t)).astype(np.int32)
+    cache = init_params(model.cache_specs(B, t + 1), KEY)
+    decode = jax.jit(lambda p, c, tk, pos: model.decode_step(p, c, tk, pos, CTX))
+    prefill = jax.jit(lambda p, b: model.prefill(p, b, CTX))
+    for pos in range(t):
+        dec_logits, cache = decode(params, cache, toks[:, pos : pos + 1], jnp.int32(pos))
+        if cfg.input_mode == "embeddings":
+            continue  # prefill consumes embeddings; decode path tested above
+        ref_logits, _ = prefill(params, {"tokens": toks[:, : pos + 1]})
+        d = np.asarray(dec_logits[:, 0], np.float32)
+        r = np.asarray(ref_logits[:, 0], np.float32)
+        top_match = (d.argmax(-1) == r.argmax(-1)).mean()
+        assert np.abs(d - r).max() < 0.25 and top_match >= 0.5, (arch, pos)
+
+
+def test_mamba_decode_matches_scan(rng):
+    """Token-by-token SSM recurrence == full associative scan."""
+    from repro.models import mamba as M
+
+    cfg = get_smoke("falcon-mamba-7b")
+    specs = M.ssm_specs(cfg)
+    params = init_params(specs, KEY)
+    x = jnp.asarray(rng.normal(size=(2, 10, cfg.d_model)).astype(np.float32) * 0.3,
+                    jnp.bfloat16)
+    full = M.apply_ssm(params, x, cfg, CTX)
+    shapes = M.init_ssm_cache_shape(cfg, 2)
+    cache = {"conv": jnp.zeros(shapes["conv"], jnp.bfloat16),
+             "h": jnp.zeros(shapes["h"], jnp.float32)}
+    outs = []
+    for tpos in range(10):
+        y, cache = M.apply_ssm_decode(params, x[:, tpos : tpos + 1], cache, cfg, CTX)
+        outs.append(y)
+    step = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full, np.float32), np.asarray(step, np.float32),
+                               atol=0.15, rtol=0.1)
+
+
+def test_flash_attention_matches_naive(rng):
+    from repro.models.layers import MaskSpec, flash_attention
+
+    b, s, h, hkv, hd = 2, 37, 8, 4, 16
+    q = jnp.asarray(rng.normal(size=(b, s, h, hd)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, s, hkv, hd)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, s, hkv, hd)).astype(np.float32))
+    out = flash_attention(q, k, v, mask=MaskSpec(causal=True), q_chunk=16, kv_chunk=8)
+    # naive reference
+    g = h // hkv
+    qr = q.reshape(b, s, hkv, g, hd)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qr, k) / np.sqrt(hd)
+    mask = np.tril(np.ones((s, s), bool))
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    ref = jnp.einsum("bhgqk,bkhd->bqhgd", jax.nn.softmax(scores, -1), v).reshape(b, s, h, hd)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-3, rtol=1e-2)
+
+
+def test_sliding_window_masks_old_tokens(rng):
+    from repro.models.layers import MaskSpec, flash_attention
+
+    b, s, h, hd = 1, 32, 2, 8
+    q = jnp.asarray(rng.normal(size=(b, s, h, hd)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, s, h, hd)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, s, h, hd)).astype(np.float32))
+    w = flash_attention(q, k, v, mask=MaskSpec(causal=True, window=4), q_chunk=8, kv_chunk=8)
+    # last position attends only to the 4 most recent: changing k/v BEFORE
+    # the window must not change the output at the last position
+    k2 = k.at[:, :20].set(0.0)
+    v2 = v.at[:, :20].set(0.0)
+    w2 = flash_attention(q, k2, v2, mask=MaskSpec(causal=True, window=4), q_chunk=8, kv_chunk=8)
+    np.testing.assert_allclose(np.asarray(w[:, -1]), np.asarray(w2[:, -1]), atol=1e-5)
+
+
+def test_moe_capacity_drops_overflow(rng):
+    """With capacity_factor tiny, outputs stay finite (dropped tokens pass
+    through via residual-weighted zeros)."""
+    import dataclasses
+
+    cfg = get_smoke("qwen3-moe-30b-a3b")
+    cfg = dataclasses.replace(cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=0.1))
+    model = build(cfg)
+    params = init_params(model.param_specs(), KEY)
+    batch = _batch(cfg, rng)
+    loss, _ = jax.jit(lambda p, b: model.loss(p, b, CTX))(params, batch)
+    assert np.isfinite(float(loss))
+
+
+def test_long_mode_cells_marked():
+    for arch in ALL_ARCHS:
+        cfg = get(arch)
+        long_cell = next(s for s in SHAPES if s.name == "long_500k")
+        ok, why = cell_applicable(cfg, long_cell)
+        if arch in ("hymba-1.5b", "falcon-mamba-7b"):
+            assert ok
+        else:
+            assert not ok and "full-attention" in why
+
+
+def test_param_counts_match_published():
+    expected = {  # billions, tolerance 12%
+        "deepseek-v2-lite-16b": 15.7, "qwen3-moe-30b-a3b": 30.5, "hymba-1.5b": 1.5,
+        "falcon-mamba-7b": 7.3, "starcoder2-3b": 3.0, "granite-8b": 8.1,
+        "yi-9b": 8.8, "command-r-plus-104b": 104.0, "phi-3-vision-4.2b": 3.8,
+    }
+    for arch, exp in expected.items():
+        got = get(arch).param_count() / 1e9
+        assert abs(got - exp) / exp < 0.12, (arch, got, exp)
+
+
+def test_ring_cache_matches_windowed_attention(rng):
+    """Long-mode decode (ring KV cache, window W) must equal full attention
+    with a sliding-window mask at every position, incl. past wrap-around."""
+    from repro.models import attention as A
+    from repro.models.layers import MaskSpec
+    import dataclasses
+
+    cfg = dataclasses.replace(get_smoke("granite-8b"), long_window=8, sub_quadratic=True)
+    specs = A.attn_specs(cfg)
+    params = init_params(specs, KEY)
+    T, W = 20, 8
+    x = jnp.asarray(rng.normal(size=(2, T, cfg.d_model)).astype(np.float32) * 0.3, jnp.bfloat16)
+
+    full = A.attn_full(params, x, cfg, CTX, mask=MaskSpec(causal=True, window=W))
+
+    cache = {"k": jnp.zeros((2, W, cfg.num_kv_heads, cfg.head_dim_), jnp.bfloat16),
+             "v": jnp.zeros((2, W, cfg.num_kv_heads, cfg.head_dim_), jnp.bfloat16)}
+    outs = []
+    for pos in range(T):
+        o, cache = A.attn_decode(params, x[:, pos : pos + 1], cache, jnp.int32(pos),
+                                 cfg, CTX, window=W)
+        outs.append(o)
+    stepped = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full, np.float32), np.asarray(stepped, np.float32),
+                               atol=0.08, rtol=0.05)

@@ -1,0 +1,80 @@
+"""Micropayment-channel safety (§3.2)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.payments import ChannelError, MicropaymentChannel, PaymentLedger
+
+
+def test_basic_flow():
+    ch = MicropaymentChannel(deposit=10.0)
+    ch.pay(1.0)
+    tx = ch.pay(2.5)
+    assert tx.refund_amount == pytest.approx(6.5)
+    client, server = ch.settle(tx)
+    assert client == pytest.approx(6.5) and server == pytest.approx(3.5)
+
+
+def test_cannot_exceed_deposit():
+    ch = MicropaymentChannel(deposit=1.0)
+    ch.pay(0.9)
+    with pytest.raises(ChannelError):
+        ch.pay(0.2)
+
+
+def test_stale_refund_rejected():
+    """The freshest refund preempts older ones — an uncooperative party
+    cannot roll back payments (the paper's core channel-safety argument)."""
+    ch = MicropaymentChannel(deposit=5.0)
+    old = ch.pay(1.0)
+    ch.pay(1.0)
+    with pytest.raises(ChannelError):
+        ch.settle(old)
+
+
+def test_forged_signature_rejected():
+    import dataclasses
+
+    ch = MicropaymentChannel(deposit=5.0)
+    tx = ch.pay(1.0)
+    forged = dataclasses.replace(tx, refund_amount=5.0)
+    with pytest.raises(ChannelError):
+        ch.settle(forged)
+
+
+def test_settle_twice_rejected():
+    ch = MicropaymentChannel(deposit=5.0)
+    tx = ch.pay(1.0)
+    ch.settle(tx)
+    with pytest.raises(ChannelError):
+        ch.settle(tx)
+
+
+def test_settle_times_strictly_decrease():
+    ch = MicropaymentChannel(deposit=5.0)
+    t_prev = ch.latest_refund.settle_time
+    for _ in range(5):
+        tx = ch.pay(0.5)
+        assert tx.settle_time < t_prev  # newer refund enforceable earlier
+        t_prev = tx.settle_time
+
+
+@given(st.lists(st.floats(0.001, 0.2), min_size=1, max_size=50))
+@settings(max_examples=30, deadline=None)
+def test_conservation(payments):
+    """client_refund + server_payout == deposit, payments monotone."""
+    ch = MicropaymentChannel(deposit=sum(payments) + 1.0)
+    for p in payments:
+        ch.pay(p)
+    client, server = ch.settle(ch.latest_refund)
+    assert client + server == pytest.approx(ch.deposit)
+    assert server == pytest.approx(sum(payments))
+
+
+def test_ledger_totals():
+    led = PaymentLedger()
+    led.open("sp1", 10.0)
+    led.open("sp2", 10.0)
+    for _ in range(10):
+        led.pay("sp1", 1e-6)
+    led.pay("sp2", 5e-6)
+    assert led.total_paid() == pytest.approx(15e-6)

@@ -1,0 +1,145 @@
+"""End-to-end storage behaviour: write/read lifecycle, failures, repair."""
+import numpy as np
+import pytest
+
+from repro.core.contract import BlobState
+from repro.storage.repair import RepairCoordinator, RepairError
+from repro.storage.rpc import ReadError
+
+
+def _blob(rng, n=200_000):
+    return rng.integers(0, 256, n, dtype=np.uint8).tobytes()
+
+
+def test_write_read_roundtrip(cluster, rng):
+    contract, sps, rpc, client = cluster
+    data = _blob(rng)
+    meta = client.put(data)
+    assert meta.state is BlobState.READY
+    assert client.get(meta.blob_id) == data
+
+
+def test_byte_range_reads(cluster, rng):
+    contract, sps, rpc, client = cluster
+    data = _blob(rng)
+    meta = client.put(data)
+    for off, ln in [(0, 1), (100, 50), (65_000, 70_000), (199_999, 1)]:
+        assert client.get(meta.blob_id, off, ln) == data[off : off + ln]
+
+
+def test_placement_spreads_failure_domains(cluster, rng):
+    contract, sps, rpc, client = cluster
+    meta = client.put(_blob(rng))
+    for cs in range(meta.num_chunksets):
+        assigned = [meta.placement[(cs, ck)] for ck in range(meta.n)]
+        assert len(set(assigned)) == meta.n  # distinct SPs
+        dcs = {contract.sps[s].dc for s in assigned}
+        assert len(dcs) == 3  # all DCs used
+
+
+def test_reads_survive_m_failures(cluster, rng):
+    contract, sps, rpc, client = cluster
+    data = _blob(rng)
+    meta = client.put(data)
+    victims = {meta.placement[(0, 0)], meta.placement[(0, 1)]}  # m = 2
+    for v in victims:
+        sps[v].crash()
+    rpc._cache.clear()
+    assert client.get(meta.blob_id) == data
+
+
+def test_read_fails_beyond_m(cluster, rng):
+    contract, sps, rpc, client = cluster
+    meta = client.put(_blob(rng))
+    for ck in range(3):  # m + 1 = 3 chunks of chunkset 0 gone
+        sps[meta.placement[(0, ck)]].crash()
+    rpc._cache.clear()
+    with pytest.raises(ReadError):
+        rpc.read_chunkset(meta.blob_id, 0)
+
+
+def test_corruption_detected_and_tolerated(cluster, rng):
+    contract, sps, rpc, client = cluster
+    data = _blob(rng)
+    meta = client.put(data)
+    sps[meta.placement[(0, 0)]].behavior.corrupt = True
+    rpc._cache.clear()
+    assert client.get(meta.blob_id) == data
+    assert rpc.stats.chunks_bad >= 1
+
+
+def test_msr_repair_path(cluster, rng):
+    contract, sps, rpc, client = cluster
+    data = _blob(rng)
+    meta = client.put(data)
+    victim = meta.placement[(0, 0)]
+    sps[victim].wipe()  # lost all its chunks, still alive
+    rc = RepairCoordinator(contract, sps, rpc.layout)
+    reports = rc.repair_all()
+    assert reports and all(r.mode == "msr" and r.verified for r in reports)
+    # MSR reads (n-1) * chunk/q instead of k * chunk
+    lay = rpc.layout
+    expect = (lay.n - 1) * lay.chunk_bytes // lay.code.q
+    assert all(r.helper_bytes_read == expect for r in reports)
+    assert not rc.scan_lost_chunks()
+    rpc._cache.clear()
+    assert client.get(meta.blob_id) == data
+
+
+def test_mds_fallback_repair(cluster, rng):
+    """Two losses in one chunkset: optimal pattern impossible -> MDS path."""
+    contract, sps, rpc, client = cluster
+    data = _blob(rng)
+    meta = client.put(data)
+    sps[meta.placement[(0, 0)]].wipe()
+    sps[meta.placement[(0, 1)]].crash()
+    rc = RepairCoordinator(contract, sps, rpc.layout)
+    rep = rc.repair_chunk(meta.blob_id, 0, 0)
+    assert rep.mode == "mds" and rep.verified
+
+
+def test_repair_unrecoverable_raises(cluster, rng):
+    contract, sps, rpc, client = cluster
+    meta = client.put(_blob(rng))
+    for ck in range(3):
+        sps[meta.placement[(0, ck)]].crash()
+    rc = RepairCoordinator(contract, sps, rpc.layout)
+    with pytest.raises(RepairError):
+        rc.repair_chunk(meta.blob_id, 0, 3)
+
+
+def test_hedged_reads_prefer_fast_sps(cluster, rng):
+    contract, sps, rpc, client = cluster
+    data = _blob(rng)
+    meta = client.put(data)
+    slow = meta.placement[(0, 0)]
+    sps[slow].behavior.latency_ms = 500.0
+    rpc._cache.clear()
+    before = sps[slow].earned_reads
+    assert client.get(meta.blob_id) == data
+    # the straggler got no traffic for chunkset 0 (sorted-by-latency hedging)
+    assert sps[slow].earned_reads == before
+
+
+def test_payments_flow_per_read(cluster, rng):
+    contract, sps, rpc, client = cluster
+    meta = client.put(_blob(rng))
+    rpc._cache.clear()
+    p0 = rpc.stats.payments
+    client.get(meta.blob_id)
+    assert rpc.stats.payments > p0
+    assert sum(sp.earned_reads for sp in sps.values()) == pytest.approx(rpc.stats.payments)
+
+
+def test_unknown_rpc_cannot_mark_ready(cluster, rng):
+    contract, sps, rpc, client = cluster
+    meta = client.put(_blob(rng))
+    with pytest.raises(PermissionError):
+        contract.mark_ready(meta.blob_id, "mallory")
+
+
+def test_small_blob_zero_padding(cluster, rng):
+    contract, sps, rpc, client = cluster
+    data = b"tiny"
+    meta = client.put(data)
+    assert client.get(meta.blob_id) == data  # padding invisible to reader
