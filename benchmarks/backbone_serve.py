@@ -1,0 +1,163 @@
+"""Backbone data-plane serving benchmark (§2.3 + §3.5).
+
+Replays deterministic workload scenarios (video streaming, AI-training
+epochs, analytics scans, Zipf hot-object traffic) against a multi-RPC fleet
+over the simulated dedicated backbone, for every routing policy, and
+reports per (policy x workload):
+
+    goodput (simulated Mbps), p50/p99 simulated request latency,
+    hedged requests wasted, fleet cache hit rate.
+
+Adversity baked in: heterogeneous SP service latencies, one 250 ms
+straggler, one SP crashed after the write phase — the paper's serving
+claims are only interesting under failures.  Latencies are workload-driven
+sums on the simulated clock; wall time only bounds how long the benchmark
+itself runs.  ``BACKBONE_SMOKE=1`` shrinks the traffic for CI.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import row
+from repro.core.contract import ShelbyContract
+from repro.core.placement import SPInfo
+from repro.net.backbone import Backbone
+from repro.net.fleet import (
+    CacheAffinityPolicy,
+    LatencyAwarePolicy,
+    PowerOfTwoPolicy,
+    RPCFleet,
+)
+from repro.net.workloads import (
+    analytics_scan,
+    training_epoch,
+    video_streaming,
+    zipf_hotset,
+)
+from repro.storage.blob import BlobLayout
+from repro.storage.rpc import BackboneTransport, RPCNode
+from repro.storage.sdk import ShelbyClient
+from repro.storage.sp import StorageProvider
+
+SMOKE = bool(int(os.environ.get("BACKBONE_SMOKE", "0")))
+NUM_SPS = 12
+NUM_RPCS = 3
+NUM_BLOBS = 4 if SMOKE else 6
+ZIPF_REQUESTS = 80 if SMOKE else 250
+
+POLICIES = {
+    "latency": LatencyAwarePolicy,
+    "affinity": CacheAffinityPolicy,
+    "p2c": lambda: PowerOfTwoPolicy(seed=0),
+}
+
+
+def _world():
+    """Contract + SPs + stored blobs + backbone — shared across combos."""
+    layout = BlobLayout(k=4, m=2, chunkset_bytes_target=64 * 1024)
+    contract = ShelbyContract()
+    bb = Backbone.mesh(3, base_latency_ms=6.0, gbps=25.0)
+    rng = np.random.default_rng(42)
+    sps = {}
+    for i in range(NUM_SPS):
+        dc = f"dc{i % 3}"
+        contract.register_sp(SPInfo(sp_id=i, stake=1000.0, dc=dc, rack=f"r{i % 4}"))
+        sps[i] = StorageProvider(i)
+        sps[i].behavior.latency_ms = float(rng.uniform(1.0, 12.0))
+        bb.register_node(f"sp{i}", dc)
+    for c in range(3):
+        bb.register_node(f"client{c}", f"dc{c}")
+    # a throwaway writer node disperses the blobs
+    bb.register_node("writer", "dc0")
+    writer = RPCNode("writer", contract, sps, layout)
+    client = ShelbyClient(contract, writer, deposit=1e9)
+    metas = []
+    for b in range(NUM_BLOBS):
+        size = (8 if b == 0 else 4) * layout.chunkset_bytes  # blob 0: the "video"
+        data = rng.integers(0, 256, size, dtype=np.uint8).tobytes()
+        metas.append(client.put(data))
+    # adversity AFTER the write phase
+    sps[0].behavior.latency_ms = 250.0  # straggler
+    sps[1].crash()
+    return layout, contract, bb, sps, metas
+
+
+def _workloads(metas):
+    return {
+        "streaming": lambda: video_streaming(
+            metas[0], client="client0", segment_bytes=64 * 1024, bitrate_mbps=25.0
+        ),
+        "training": lambda: training_epoch(
+            metas, client="client1", sample_bytes=64 * 1024, epochs=1, seed=3
+        ),
+        "zipf": lambda: zipf_hotset(
+            metas,
+            clients=["client0", "client1", "client2"],
+            num_requests=ZIPF_REQUESTS,
+            seed=5,
+        ),
+        "analytics": lambda: analytics_scan(
+            metas, client="client2", scan_bytes=128 * 1024
+        ),
+    }
+
+
+def _fresh_fleet(layout, contract, bb, sps, policy):
+    rpcs = []
+    for r in range(NUM_RPCS):
+        node = f"rpc{r}"
+        if node not in bb._node_dc:
+            bb.register_node(node, f"dc{r}")
+        rpcs.append(
+            RPCNode(
+                node, contract, sps, layout,
+                cache_chunksets=16,
+                transport=BackboneTransport(sps, bb, node),
+            )
+        )
+    bb.reset_accounting()
+    return RPCFleet(rpcs, policy, backbone=bb)
+
+
+def run():
+    layout, contract, bb, sps, metas = _world()
+    p99_zipf = {}
+    for pname, policy_factory in POLICIES.items():
+        for wname, workload in _workloads(metas).items():
+            fleet = _fresh_fleet(layout, contract, bb, sps, policy_factory())
+            reqs = workload()
+            t0 = time.perf_counter()
+            span_end = 0.0
+            for req in reqs:
+                data, lat = fleet.read_range(
+                    req.blob_id, req.offset, req.length,
+                    client=req.client, t_ms=req.t_ms,
+                )
+                assert len(data) == min(
+                    req.length, contract.blobs[req.blob_id].size_bytes - req.offset
+                )
+                span_end = max(span_end, req.t_ms + lat)
+            wall = time.perf_counter() - t0
+            span_ms = span_end - reqs[0].t_ms
+            goodput_mbps = fleet.bytes_served * 8e-3 / span_ms
+            p50, p99 = fleet.latency_percentiles(50.0, 99.0)
+            if wname == "zipf":
+                p99_zipf[pname] = p99
+            row(
+                f"backbone_serve/{pname}_{wname}",
+                wall * 1e6 / len(reqs),
+                f"goodput={goodput_mbps:.1f}Mbps;p50={p50:.1f}ms;p99={p99:.1f}ms;"
+                f"hedges={fleet.hedges_launched()};waste={fleet.hedged_wasted()};"
+                f"cache_hit={fleet.cache_hit_rate():.2f}",
+            )
+    # regression-shaped bars: hedging must keep tail latency under the
+    # 250 ms straggler for the cache-friendly hot-object workload
+    for pname, p99 in p99_zipf.items():
+        assert p99 < 250.0, f"{pname}: zipf p99 {p99:.1f}ms not shielded from straggler"
+
+
+if __name__ == "__main__":
+    run()

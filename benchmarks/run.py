@@ -14,6 +14,7 @@ SUITES = [
     "repair_bandwidth",  # §3.3 Clay vs RS
     "write_path",  # Figure 2
     "read_throughput",  # §1 4K-streaming bar
+    "backbone_serve",  # §2.3 data plane: fleet x workload serving grid
     "audit_detection",  # §4 / §5.4(3)
     "incentives",  # §5.4 calibration table
     "durability_bench",  # Appendix A

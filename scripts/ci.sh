@@ -1,0 +1,24 @@
+#!/usr/bin/env bash
+# CI gate: tier-1 tests + a time-budgeted smoke pass of the serving
+# benchmarks.  Exits nonzero on regression-shaped failures: test failures,
+# benchmark assertion bars (p99 shielded from stragglers, 40 Mbps 4K bar),
+# or blowing the smoke time budget.
+#
+#   scripts/ci.sh                 # default 600 s benchmark budget
+#   SMOKE_BUDGET_S=120 scripts/ci.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+echo "== tier-1: pytest =="
+# test_distributed_equivalence_8dev needs jax.shard_map, absent from the
+# pinned jax in this image (fails at seed too) — deselected so the gate
+# trips only on NEW failures.
+python -m pytest -q \
+    --deselect tests/test_sharding.py::test_distributed_equivalence_8dev
+
+echo "== benchmark smoke (budget: ${SMOKE_BUDGET_S:-600}s) =="
+BACKBONE_SMOKE=1 timeout "${SMOKE_BUDGET_S:-600}" \
+    python -m benchmarks.run backbone_serve read_throughput
+
+echo "CI OK"

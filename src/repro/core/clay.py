@@ -169,13 +169,21 @@ class ClayCode:
         r = gf.matmul_np(gf.mat_inv(he), hk)
         return r, known
 
-    def _solve(self, c: np.ndarray, unknown_flats: frozenset[int]) -> np.ndarray:
+    def _solve(
+        self, c: np.ndarray, unknown_flats: frozenset[int], matmul=None
+    ) -> np.ndarray:
         """Fill in coupled values of `unknown_flats` given all other nodes.
 
         c: (N, alpha, w) uint8 with known nodes' coupled values populated
         (virtual nodes are zero).  Returns c with unknowns filled.
         Precondition: len(unknown_flats) <= m.
+
+        `matmul` swaps the GF backend for the per-group linear solves
+        ((M,K) x (K,N) -> (M,N) over GF(2^8)); defaults to the numpy
+        table path, and accepts `repro.kernels.ops.gf_matmul_np` to route
+        the wide payload product through the Pallas kernel.
         """
+        matmul = matmul or gf.matmul_np
         assert len(unknown_flats) <= self.m, "more erasures than parities"
         if not unknown_flats:
             return c
@@ -217,7 +225,7 @@ class ClayCode:
             zis = [self.plane_index[z] for z in zs]
             kn = u[list(known_used)][:, zis]  # (K', G, w)
             kn2 = kn.reshape(len(known_used), -1)
-            rec = gf.matmul_np(r_mat, kn2).reshape(len(unknown_flats), len(zis), -1)
+            rec = matmul(r_mat, kn2).reshape(len(unknown_flats), len(zis), -1)
             for row, f in enumerate(sorted(unknown_flats)):
                 for gi, zi in enumerate(zis):
                     u[f, zi] = rec[row, gi]
@@ -275,6 +283,48 @@ class ClayCode:
 
     def reconstruct_data(self, shards: dict[int, np.ndarray]) -> np.ndarray:
         return self.decode(shards)[: self.k]
+
+    # -- batched decode (§3.5 erasure-coding acceleration) -------------------------
+    def decode_batch(
+        self, shard_sets: list[dict[int, np.ndarray]], *, matmul=None
+    ) -> list[np.ndarray]:
+        """Decode many chunksets' shard sets through few wide GF calls.
+
+        Chunksets sharing an *erasure pattern* are stacked along the byte
+        (w) axis and pushed through the plane-schedule engine once, so each
+        IS-group linear solve becomes a single (e, K') x (K', G*B*w) GF
+        matmul instead of B narrow ones — wide enough to amortize a Pallas
+        `gf_matmul` dispatch (pass ``matmul=repro.kernels.ops.gf_matmul_np``).
+        Byte-identical to calling `decode` per chunkset.
+        """
+        if not shard_sets:
+            return []
+        out: list[np.ndarray | None] = [None] * len(shard_sets)
+        groups: dict[tuple[int, ...], list[int]] = {}
+        for i, shards in enumerate(shard_sets):
+            if len(shards) < self.k:
+                raise ValueError(f"need >= k={self.k} shards, got {len(shards)}")
+            erased = tuple(
+                self.real_to_flat[r] for r in range(self.n) if r not in shards
+            )
+            groups.setdefault(erased, []).append(i)
+        for erased, idxs in groups.items():
+            w = next(iter(shard_sets[idxs[0]].values())).shape[-1]
+            c = np.zeros((self.N, self.alpha, w * len(idxs)), dtype=np.uint8)
+            for b, i in enumerate(idxs):
+                for real, shard in shard_sets[i].items():
+                    assert shard.shape == (self.alpha, w), shard.shape
+                    c[self.real_to_flat[real], :, b * w : (b + 1) * w] = shard
+            c = self._solve(c, frozenset(erased), matmul=matmul)
+            full = c[list(self.real_to_flat)]
+            for b, i in enumerate(idxs):
+                out[i] = np.ascontiguousarray(full[:, :, b * w : (b + 1) * w])
+        return out
+
+    def reconstruct_data_batch(
+        self, shard_sets: list[dict[int, np.ndarray]], *, matmul=None
+    ) -> list[np.ndarray]:
+        return [cw[: self.k] for cw in self.decode_batch(shard_sets, matmul=matmul)]
 
     # -- bandwidth-optimal single-node repair -------------------------------------
     def repair_planes(self, failed_real: int) -> list[tuple[int, ...]]:

@@ -21,8 +21,10 @@ import numpy as np
 from repro.core.audit import AuditParams, Challenge
 from repro.core.contract import ShelbyContract
 from repro.core.placement import SPInfo
+from repro.net.fleet import CacheAffinityPolicy, RPCFleet
+from repro.net.workloads import zipf_hotset
 from repro.storage.blob import BlobLayout
-from repro.storage.rpc import RPCNode
+from repro.storage.rpc import ReadError, RPCNode
 from repro.storage.sdk import ShelbyClient
 from repro.storage.sp import SPBehavior, StorageProvider
 
@@ -33,6 +35,8 @@ class SimResult:
     scores: dict[int, float]  # last-epoch scores
     slashed: dict[int, float]
     ejected: set[int]
+    bytes_served: int = 0  # read traffic through the RPC fleet (if any)
+    read_p99_ms: float = 0.0  # simulated, from the fleet's request log
 
     def utility(self, sp: int) -> float:
         return self.utilities[sp]
@@ -48,6 +52,8 @@ def run_sim(
     storage_cost_per_chunk_epoch: float = 0.05,
     layout: BlobLayout | None = None,
     seed: int = 0,
+    num_rpcs: int = 1,
+    read_requests_per_epoch: int = 0,
 ) -> SimResult:
     params = params or AuditParams(p_a=0.5, auditors_per_audit=4, C=50, p_ata=0.3)
     layout = layout or BlobLayout(k=4, m=2, chunkset_bytes_target=64 * 1024)
@@ -57,7 +63,9 @@ def run_sim(
     for i in range(n):
         contract.register_sp(SPInfo(sp_id=i, stake=10_000.0, dc=f"dc{i % 3}"))
         sps[i] = StorageProvider(i, behaviors.get(i, SPBehavior()))
-    rpc = RPCNode("rpc0", contract, sps, layout)
+    rpcs = [RPCNode(f"rpc{r}", contract, sps, layout) for r in range(num_rpcs)]
+    fleet = RPCFleet(rpcs, CacheAffinityPolicy())
+    rpc = fleet.primary
     client = ShelbyClient(contract, rpc, deposit=1e9)
 
     # crashes take effect AFTER the write phase (the contract would never
@@ -108,12 +116,34 @@ def run_sim(
         for sp in sps.values():  # fresh scoreboards next epoch
             sp.scoreboard.bits.clear()
 
+        if read_requests_per_epoch:
+            # paid Zipf read traffic through the RPC fleet: serving income
+            # accrues to SPs on top of storage rewards ("reads are paid")
+            metas = list(contract.blobs.values())
+            reqs = zipf_hotset(
+                metas,
+                clients=["user"],
+                num_requests=read_requests_per_epoch,
+                seed=seed * 1009 + epoch,
+            )
+            for req in reqs:
+                try:
+                    fleet.read_range(req.blob_id, req.offset, req.length)
+                except ReadError:
+                    pass  # unrecoverable under current failures: dropped request
+
+    for i in range(n):
+        utilities[i] += sps[i].earned_reads
+
     slashed_total = {i: 10_000.0 - contract.stakes.get(i, 10_000.0) for i in range(n)}
+    p99 = fleet.latency_percentiles(99.0)[0] if fleet.request_latencies_ms else 0.0
     return SimResult(
         utilities=utilities,
         scores=last.scores if last else {},
         slashed=slashed_total,
         ejected=set(contract.ejected),
+        bytes_served=fleet.bytes_served,
+        read_p99_ms=p99,
     )
 
 

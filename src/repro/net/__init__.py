@@ -1,0 +1,47 @@
+"""Backbone data plane (§2.3, §3.1): simulated dedicated network + RPC fleet.
+
+Shelby "operates over a dedicated backbone connecting RPC and storage
+nodes".  This package models that data plane deterministically so serving
+claims (hedging wins under stragglers, p99 latency, goodput at scale) are
+*measured* on a simulated clock, never inferred from wall-clock noise:
+
+* ``backbone``  — datacenter topology, per-link latency/bandwidth, FIFO
+  transfer accounting on a simulated clock.
+* ``scheduler`` — deadline-based hedged chunk scheduler (replaces the
+  fixed k+hedge loop that used to live in ``storage/rpc.py``).
+* ``fleet``     — multi-RPC router with pluggable policies (latency-aware,
+  cache-affinity rendezvous hashing, power-of-two-choices).
+* ``workloads`` — deterministic scenario generators (video streaming,
+  training epochs, analytics scans, Zipf hot-object traffic).
+"""
+from repro.net.backbone import Backbone, LinkSpec
+from repro.net.fleet import (
+    CacheAffinityPolicy,
+    LatencyAwarePolicy,
+    PowerOfTwoPolicy,
+    RPCFleet,
+)
+from repro.net.scheduler import FetchResult, HedgedScheduler
+from repro.net.workloads import (
+    ReadRequest,
+    analytics_scan,
+    training_epoch,
+    video_streaming,
+    zipf_hotset,
+)
+
+__all__ = [
+    "Backbone",
+    "LinkSpec",
+    "HedgedScheduler",
+    "FetchResult",
+    "RPCFleet",
+    "LatencyAwarePolicy",
+    "CacheAffinityPolicy",
+    "PowerOfTwoPolicy",
+    "ReadRequest",
+    "video_streaming",
+    "training_epoch",
+    "analytics_scan",
+    "zipf_hotset",
+]

@@ -1,0 +1,172 @@
+"""Multi-RPC serving fleet (§2.3): request routing + per-node hot caches.
+
+One RPC node cannot serve "millions of users"; Shelby's data plane is a
+*fleet* of RPC nodes behind the same contract, each with its own decoded
+hot-cache.  The router decides which node serves which request; the policy
+determines the cache economics:
+
+* ``LatencyAwarePolicy``   — client->node propagation + EWMA of the node's
+  recent fetch latency (greedy, CDN-edge-style).
+* ``CacheAffinityPolicy``  — rendezvous (highest-random-weight) hashing on
+  (blob, chunkset): every object has one home node, so the fleet's
+  aggregate cache behaves like one big cache.
+* ``PowerOfTwoPolicy``     — classic power-of-two-choices on routed load;
+  near-uniform balance with two probes.
+
+Routing is per *chunkset*, the cache/decode unit, so a range read spanning
+chunksets may fan out across the fleet and assemble at the edge (chunkset
+fetches overlap; the request's simulated latency is the slowest leg plus
+the client<->node round trip when a backbone is attached).
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import TYPE_CHECKING
+
+import numpy as np
+
+from repro.net.backbone import Backbone
+
+if TYPE_CHECKING:  # avoid a cycle: storage.rpc imports repro.net.scheduler
+    from repro.storage.rpc import RPCNode
+
+
+class LatencyAwarePolicy:
+    """Route to the node minimizing propagation + recent-latency EWMA."""
+
+    def pick(self, key: tuple[int, int], client: str | None, fleet: "RPCFleet") -> int:
+        def est(i: int) -> tuple[float, int, int]:
+            prop = 0.0
+            if fleet.backbone is not None and client is not None:
+                prop = fleet.backbone.propagation_ms(client, fleet.node_ids[i])
+            return (prop + fleet.ewma_ms[i], fleet.routed[i], i)
+
+        return min(range(len(fleet.rpcs)), key=est)
+
+
+class CacheAffinityPolicy:
+    """Rendezvous hashing on (blob_id, chunkset) -> stable home node."""
+
+    def pick(self, key: tuple[int, int], client: str | None, fleet: "RPCFleet") -> int:
+        def weight(i: int) -> bytes:
+            tag = f"{fleet.node_ids[i]}|{key[0]}|{key[1]}".encode()
+            return hashlib.sha256(tag).digest()
+
+        return max(range(len(fleet.rpcs)), key=weight)
+
+
+class PowerOfTwoPolicy:
+    """Two seeded random probes, pick the less-loaded (routed count)."""
+
+    def __init__(self, seed: int = 0):
+        self._rng = np.random.default_rng(seed)
+
+    def pick(self, key: tuple[int, int], client: str | None, fleet: "RPCFleet") -> int:
+        n = len(fleet.rpcs)
+        if n == 1:
+            return 0
+        a, b = self._rng.choice(n, size=2, replace=False)
+        return int(a if fleet.routed[a] <= fleet.routed[b] else b)
+
+
+class RPCFleet:
+    """Routes chunkset reads across RPC nodes and accounts serving metrics."""
+
+    def __init__(
+        self,
+        rpcs: list[RPCNode],
+        policy,
+        *,
+        backbone: Backbone | None = None,
+        ewma_alpha: float = 0.3,
+    ):
+        if not rpcs:
+            raise ValueError("fleet needs at least one RPC node")
+        self.rpcs = list(rpcs)
+        self.node_ids = [r.rpc_id for r in self.rpcs]
+        self.policy = policy
+        self.backbone = backbone
+        self._alpha = ewma_alpha
+        self.ewma_ms = [0.0] * len(self.rpcs)
+        self._ewma_seeded = [False] * len(self.rpcs)
+        self.routed = [0] * len(self.rpcs)
+        self.chunkset_reads = 0
+        self.bytes_served = 0
+        self.request_latencies_ms: list[float] = []
+
+    @property
+    def primary(self) -> RPCNode:
+        """The node that fronts write dispersal (any node can; pick node 0)."""
+        return self.rpcs[0]
+
+    # -- serving ------------------------------------------------------------------
+    def _route(self, blob_id: int, chunkset: int, client: str | None) -> int:
+        i = self.policy.pick((blob_id, chunkset), client, self)
+        self.routed[i] += 1
+        self.chunkset_reads += 1
+        return i
+
+    def _observe(self, i: int, ms: float) -> None:
+        if not self._ewma_seeded[i]:
+            self.ewma_ms[i], self._ewma_seeded[i] = ms, True
+        else:
+            self.ewma_ms[i] = (1 - self._alpha) * self.ewma_ms[i] + self._alpha * ms
+
+    def _prop(self, i: int, client: str | None) -> float:
+        if self.backbone is None or client is None:
+            return 0.0
+        return self.backbone.propagation_ms(client, self.node_ids[i])
+
+    def read_range(
+        self, blob_id: int, offset: int, length: int, *, client: str | None = None,
+        t_ms: float = 0.0,
+    ) -> tuple[bytes, float]:
+        """Serve [offset, offset+length) and return (bytes, sim_latency_ms).
+
+        `t_ms` is the request's arrival time on the global simulated clock;
+        concurrent requests queue against each other on backbone trunks.
+        Chunksets are routed individually, then fetched per node in one
+        call so each node batch-decodes its share in wide GF solves.
+        Chunkset legs overlap (hedged fetches are independent), so request
+        latency is the max leg, not the sum.
+        """
+        lay = self.primary.layout
+        meta = self.primary.contract.blobs[blob_id]
+        first, last = lay.byte_range_to_chunksets(offset, length)
+        css = list(range(first, last + 1))
+        by_node: dict[int, list[int]] = {}
+        for cs in css:
+            by_node.setdefault(self._route(blob_id, cs, client), []).append(cs)
+        decoded: dict[int, np.ndarray] = {}
+        latency = 0.0
+        for i, group in by_node.items():
+            prop = self._prop(i, client)
+            parts, ms = self.rpcs[i].read_chunksets_timed(blob_id, group, t_ms + prop)
+            self._observe(i, ms)
+            latency = max(latency, ms + 2.0 * prop)
+            decoded.update(zip(group, parts))
+        data = lay.extract_range(
+            [decoded[cs] for cs in css], first, offset, length, meta.size_bytes
+        )
+        self.bytes_served += len(data)
+        self.request_latencies_ms.append(latency)
+        return data, latency
+
+    # -- metrics -------------------------------------------------------------------
+    def cache_hit_rate(self) -> float:
+        hits = sum(r.stats.cache_hits for r in self.rpcs)
+        return hits / self.chunkset_reads if self.chunkset_reads else 0.0
+
+    def hedged_wasted(self) -> int:
+        """Paid-but-unused requests, incl. crash-recovery replacements."""
+        return sum(r.stats.hedged_wasted for r in self.rpcs)
+
+    def hedges_launched(self) -> int:
+        """Requests launched by hedge deadlines only (straggler mitigation)."""
+        return sum(r.stats.hedges_launched for r in self.rpcs)
+
+    def latency_percentiles(self, *qs: float) -> tuple[float, ...]:
+        if not self.request_latencies_ms:
+            return tuple(0.0 for _ in qs)
+        arr = np.asarray(self.request_latencies_ms)
+        return tuple(float(np.percentile(arr, q)) for q in qs)

@@ -1,0 +1,126 @@
+"""Deadline-based hedged chunk scheduler (§3.5 request hedging).
+
+Replaces the fixed ``k + hedge`` loop that used to live in
+``storage/rpc.py`` with an event-driven scheduler on the simulated clock:
+
+1. issue the k cheapest requests (by estimated latency) at t = 0;
+2. arm a *hedge deadline* — a multiple of the slowest primary's estimate;
+3. on a transport failure or a verification failure, immediately re-issue
+   to the next-best candidate (failure recovery, not hedging);
+4. if the deadline fires before k valid responses landed, launch up to
+   ``hedge`` extra requests and re-arm (straggler mitigation — the paper's
+   "ignore stragglers" behaviour, with the waste made measurable).
+
+The scheduler never peeks at a request's completion time before the
+simulated clock reaches it, so its decisions are exactly the ones a real
+RPC node could make — and everything is deterministic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from collections import deque
+from typing import Callable
+
+
+@dataclasses.dataclass
+class FetchResult:
+    """Outcome of one k-of-n hedged fetch on the simulated clock."""
+
+    shards: dict[int, object]  # candidate key -> payload (first k valid)
+    latency_ms: float  # sim time at which the k-th valid shard landed
+    issued: int = 0
+    used: int = 0
+    bad: int = 0  # responses failing verification (corruption, §2.3)
+    failed: int = 0  # transport-level failures (crashed SP, missing chunk)
+    hedges: int = 0  # requests launched by the hedge deadline timer
+
+    @property
+    def wasted(self) -> int:
+        """Paid requests that did not contribute a used shard."""
+        return self.issued - self.used
+
+
+class HedgedScheduler:
+    """Issues requests through a transport-shaped callback.
+
+    fetch() drives ``issue(key, sp_id, t_ms) -> (payload | None, done_ms)``
+    — the transport must answer with the payload (or None for a failure)
+    and the simulated completion time — plus an optional
+    ``verify(key, payload) -> bool`` commitment check.
+    """
+
+    def __init__(
+        self,
+        hedge: int = 2,
+        *,
+        deadline_factor: float = 3.0,
+        min_deadline_ms: float = 5.0,
+    ):
+        self.hedge = hedge
+        self.deadline_factor = deadline_factor
+        self.min_deadline_ms = min_deadline_ms
+
+    def fetch(
+        self,
+        k: int,
+        candidates: list[tuple[int, int, float]],  # (key, sp_id, est_ms)
+        issue: Callable[[int, int, float], tuple[object, float]],
+        verify: Callable[[int, object], bool] | None = None,
+        start_ms: float = 0.0,
+    ) -> FetchResult:
+        """`start_ms` anchors the fetch on the global simulated clock so
+        transfers from concurrent requests queue against each other."""
+        if len(candidates) < k:
+            raise ValueError(f"need >= {k} candidates, got {len(candidates)}")
+        order = sorted(candidates, key=lambda c: (c[2], c[0]))
+        queue = deque(order)
+        events: list[tuple[float, int, str, object]] = []
+        seq = itertools.count()
+        res = FetchResult(shards={}, latency_ms=0.0)
+
+        def launch(t_ms: float) -> None:
+            key, sp_id, _est = queue.popleft()
+            payload, done_ms = issue(key, sp_id, t_ms)
+            res.issued += 1
+            heapq.heappush(events, (done_ms, next(seq), "done", (key, payload)))
+
+        primaries = order[:k]
+        for _ in range(k):
+            launch(start_ms)
+        deadline = max(
+            self.min_deadline_ms, self.deadline_factor * primaries[-1][2]
+        )
+        heapq.heappush(events, (start_ms + deadline, next(seq), "hedge", None))
+
+        now = start_ms
+        while events and len(res.shards) < k:
+            now, _, kind, payload = heapq.heappop(events)
+            if kind == "hedge":
+                # stragglers outstanding past the deadline: hedge + re-arm
+                launched = 0
+                while launched < self.hedge and queue:
+                    launch(now)
+                    launched += 1
+                res.hedges += launched
+                if launched and queue:
+                    heapq.heappush(
+                        events, (now + deadline, next(seq), "hedge", None)
+                    )
+                continue
+            key, data = payload
+            if data is None:
+                res.failed += 1
+                if queue:
+                    launch(now)  # instant failure recovery
+                continue
+            if verify is not None and not verify(key, data):
+                res.bad += 1
+                if queue:
+                    launch(now)
+                continue
+            res.shards[key] = data
+            res.used += 1
+        res.latency_ms = now - start_ms
+        return res

@@ -1,0 +1,118 @@
+"""Deterministic workload scenario generators for the serving data plane.
+
+Each generator yields a list of :class:`ReadRequest` — (sim time, client
+node, blob, byte range) — modelling one of the paper's target workloads
+(§1: "video streaming, AI training, analytics"):
+
+* ``video_streaming`` — sequential segment reads paced at the bitrate;
+* ``training_epoch``  — every sample of a dataset, reshuffled per epoch;
+* ``analytics_scan``  — large sequential scans over whole blobs;
+* ``zipf_hotset``     — Zipf-popular random-access traffic (the CDN case
+  where hot-cache policy dominates).
+
+Generators are pure functions of their seed, so two runs of a benchmark
+replay byte-for-byte identical traffic.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ReadRequest:
+    t_ms: float
+    client: str  # backbone node id (or bare label when no backbone attached)
+    blob_id: int
+    offset: int
+    length: int
+
+
+def video_streaming(
+    meta,
+    *,
+    client: str,
+    segment_bytes: int = 128 * 1024,
+    bitrate_mbps: float = 25.0,
+    start_ms: float = 0.0,
+) -> list[ReadRequest]:
+    """Sequential range reads of one blob, paced at the playback bitrate."""
+    out, t = [], start_ms
+    pace_ms = segment_bytes * 8e-3 / bitrate_mbps
+    for off in range(0, meta.size_bytes, segment_bytes):
+        out.append(
+            ReadRequest(t, client, meta.blob_id, off, min(segment_bytes, meta.size_bytes - off))
+        )
+        t += pace_ms
+    return out
+
+
+def training_epoch(
+    metas,
+    *,
+    client: str,
+    sample_bytes: int = 64 * 1024,
+    epochs: int = 1,
+    interarrival_ms: float = 1.0,
+    seed: int = 0,
+) -> list[ReadRequest]:
+    """Shuffled reads of every fixed-size sample record, per epoch."""
+    rng = np.random.default_rng(seed)
+    samples = [
+        (m.blob_id, off, min(sample_bytes, m.size_bytes - off))
+        for m in metas
+        for off in range(0, m.size_bytes, sample_bytes)
+    ]
+    out, t = [], 0.0
+    for _ in range(epochs):
+        order = rng.permutation(len(samples))
+        for i in order:
+            blob_id, off, ln = samples[i]
+            out.append(ReadRequest(t, client, blob_id, off, ln))
+            t += interarrival_ms
+    return out
+
+
+def analytics_scan(
+    metas,
+    *,
+    client: str,
+    scan_bytes: int = 512 * 1024,
+    interarrival_ms: float = 0.5,
+) -> list[ReadRequest]:
+    """Full sequential scans of every blob in large strides."""
+    out, t = [], 0.0
+    for m in metas:
+        for off in range(0, m.size_bytes, scan_bytes):
+            out.append(
+                ReadRequest(t, client, m.blob_id, off, min(scan_bytes, m.size_bytes - off))
+            )
+            t += interarrival_ms
+    return out
+
+
+def zipf_hotset(
+    metas,
+    *,
+    clients: list[str],
+    num_requests: int = 200,
+    exponent: float = 1.1,
+    read_bytes: int = 64 * 1024,
+    interarrival_ms: float = 0.4,
+    seed: int = 0,
+) -> list[ReadRequest]:
+    """Zipf-popular random reads: a few blobs soak up most of the traffic."""
+    rng = np.random.default_rng(seed)
+    ranks = np.arange(1, len(metas) + 1, dtype=np.float64)
+    popularity = ranks**-exponent
+    popularity /= popularity.sum()
+    blob_order = rng.permutation(len(metas))  # which blob holds which rank
+    out, t = [], 0.0
+    for _ in range(num_requests):
+        m = metas[blob_order[rng.choice(len(metas), p=popularity)]]
+        ln = min(read_bytes, m.size_bytes)
+        off = int(rng.integers(0, m.size_bytes - ln + 1))
+        out.append(ReadRequest(t, str(rng.choice(clients)), m.blob_id, off, ln))
+        t += interarrival_ms
+    return out

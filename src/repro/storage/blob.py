@@ -86,3 +86,19 @@ class BlobLayout:
         first = offset // self.chunkset_bytes
         last = (offset + length - 1) // self.chunkset_bytes
         return first, last
+
+    def extract_range(
+        self,
+        chunksets: list[np.ndarray],
+        first: int,
+        offset: int,
+        length: int,
+        blob_len: int,
+    ) -> bytes:
+        """Bytes [offset, offset+length) from decoded chunksets `first`..,
+        clipped at `blob_len` (the final chunkset's zero padding is never
+        visible to readers)."""
+        buf = self.assemble(chunksets, len(chunksets) * self.chunkset_bytes)
+        start = offset - first * self.chunkset_bytes
+        end = min(start + length, blob_len - first * self.chunkset_bytes)
+        return bytes(buf[start:end])

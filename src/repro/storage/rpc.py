@@ -5,11 +5,19 @@ commitments, disperse them to the contract-assigned SPs, then mark the blob
 READY.
 
 Read path ("designed to serve"): fetch any k of n chunks per chunkset with
-**request hedging** (§3.5 — issue k + hedge requests, keep the first k valid
-responses, ignore stragglers), verify every chunk against its on-chain
-Merkle root (altered data is detected, §2.3), Clay-decode, and assemble.
-Every chunk read is paid through an RPC->SP micropayment channel; a small
-hot-cache of decoded chunksets fronts popular content (§5.3).
+**deadline-based request hedging** (§3.5 — issue the k best-estimated
+requests, hedge extras when stragglers blow the deadline, ignore the rest),
+verify every chunk against its on-chain Merkle root (altered data is
+detected, §2.3), Clay-decode, and assemble.  Chunk requests travel through
+a pluggable :class:`Transport` — direct in-process calls, or the simulated
+dedicated backbone of ``repro.net.backbone`` with per-link latency and
+bandwidth accounting on a simulated clock.  Reads spanning several
+chunksets take the **batched decode path**: chunksets with the same erasure
+pattern are Clay-decoded in one wide GF call (``ClayCode.decode_batch``,
+optionally through the Pallas ``gf_matmul`` kernel) instead of
+one-at-a-time numpy.  Every chunk read is paid through an RPC->SP
+micropayment channel; a small hot-cache of decoded chunksets fronts popular
+content (§5.3).
 """
 from __future__ import annotations
 
@@ -21,6 +29,7 @@ import numpy as np
 from repro.core import commitments as cm
 from repro.core.contract import BlobState, ShelbyContract
 from repro.core.payments import PaymentLedger
+from repro.net.scheduler import FetchResult, HedgedScheduler
 from repro.storage.blob import BlobLayout
 from repro.storage.sp import StorageProvider
 
@@ -37,7 +46,72 @@ class ReadStats:
     bytes_paid_for: int = 0
     payments: float = 0.0
     cache_hits: int = 0
-    hedged_wasted: int = 0
+    hedged_wasted: int = 0  # paid requests that contributed no shard (incl. failures)
+    hedges_launched: int = 0  # deadline-triggered hedge requests only
+    chunkset_fetches: int = 0
+    fetch_ms_total: float = 0.0  # simulated clock, not wall time
+
+
+# -- transports: how chunk requests reach SPs -------------------------------------
+class DirectTransport:
+    """In-process calls; completion time is just the SP's service latency."""
+
+    def __init__(self, sps: dict[int, StorageProvider]):
+        self.sps = sps
+
+    def estimate_ms(self, sp_id: int, nbytes: int) -> float:
+        return self.sps[sp_id].behavior.latency_ms
+
+    def request(
+        self, sp_id: int, blob_id: int, chunkset: int, chunk: int,
+        payment: float, t_ms: float,
+    ) -> tuple[np.ndarray | None, float]:
+        sp = self.sps[sp_id]
+        resp = sp.serve_chunk(blob_id, chunkset, chunk, payment)
+        done = t_ms + sp.behavior.latency_ms
+        return (None, done) if resp is None else (resp[0], done)
+
+
+class BackboneTransport:
+    """Chunk requests over the simulated dedicated backbone (§2.3).
+
+    request -> (trunk transfer) -> SP service -> (trunk transfer back);
+    failures (crashed SP / missing chunk) surface as a fast NACK after one
+    round trip.  All times are simulated milliseconds, with FIFO
+    serialization accounted per trunk by the Backbone.
+    """
+
+    REQUEST_BYTES = 256
+    NACK_BYTES = 64
+
+    def __init__(self, sps, backbone, rpc_node: str,
+                 sp_node: dict[int, str] | None = None):
+        self.sps = sps
+        self.backbone = backbone
+        self.rpc_node = rpc_node
+        self.sp_node = sp_node or {i: f"sp{i}" for i in sps}
+
+    def estimate_ms(self, sp_id: int, nbytes: int) -> float:
+        bb, sp = self.backbone, self.sp_node[sp_id]
+        return (
+            bb.estimate_ms(self.rpc_node, sp, self.REQUEST_BYTES)
+            + self.sps[sp_id].behavior.latency_ms
+            + bb.estimate_ms(sp, self.rpc_node, nbytes)
+        )
+
+    def request(
+        self, sp_id: int, blob_id: int, chunkset: int, chunk: int,
+        payment: float, t_ms: float,
+    ) -> tuple[np.ndarray | None, float]:
+        bb, node = self.backbone, self.sp_node[sp_id]
+        arrived = bb.transfer(self.rpc_node, node, self.REQUEST_BYTES, t_ms)
+        sp = self.sps[sp_id]
+        resp = sp.serve_chunk(blob_id, chunkset, chunk, payment)
+        if resp is None:
+            return None, bb.transfer(node, self.rpc_node, self.NACK_BYTES, arrived)
+        data, service_ms = resp
+        done = bb.transfer(node, self.rpc_node, data.nbytes, arrived + service_ms)
+        return data, done
 
 
 class RPCNode:
@@ -51,6 +125,10 @@ class RPCNode:
         hedge: int = 2,
         cache_chunksets: int = 8,
         sp_deposit: float = 10.0,
+        transport=None,
+        scheduler: HedgedScheduler | None = None,
+        batch_decode: bool = True,
+        decode_matmul=None,
     ):
         self.rpc_id = rpc_id
         self.contract = contract
@@ -58,6 +136,10 @@ class RPCNode:
         self.layout = layout
         self.price_per_chunk = price_per_chunk
         self.hedge = hedge
+        self.transport = transport or DirectTransport(sps)
+        self.scheduler = scheduler or HedgedScheduler(hedge=hedge)
+        self.batch_decode = batch_decode
+        self.decode_matmul = decode_matmul  # e.g. repro.kernels.ops.gf_matmul_np
         self.ledger = PaymentLedger()
         for sp_id in sps:
             self.ledger.open(str(sp_id), sp_deposit)  # channels at join time (§2.3)
@@ -85,66 +167,113 @@ class RPCNode:
     # -- read path (§2.3 + §3.5 hedging) ------------------------------------------
     def _pay(self, sp_id: int) -> float:
         self.ledger.pay(str(sp_id), self.price_per_chunk)
-        self.sps[sp_id]  # channel peer exists
         self.stats.payments += self.price_per_chunk
+        self.stats.bytes_paid_for += self.layout.chunk_bytes
         return self.price_per_chunk
 
-    def read_chunkset(self, blob_id: int, chunkset: int) -> np.ndarray:
-        """Returns the decoded (k, alpha, w) data chunks of one chunkset."""
-        key = (blob_id, chunkset)
-        if key in self._cache:
-            self._cache.move_to_end(key)
-            self.stats.cache_hits += 1
-            return self._cache[key]
+    def _fetch_chunkset(
+        self, blob_id: int, chunkset: int, start_ms: float = 0.0
+    ) -> FetchResult:
+        """Hedged k-of-n shard fetch through the transport; no decode."""
         meta = self.contract.blobs[blob_id]
         if meta.state is not BlobState.READY:
             raise ReadError(f"blob {blob_id} not ready")
         lay = self.layout
-        order = sorted(
-            range(lay.n),
-            key=lambda ck: self.sps[meta.placement[(chunkset, ck)]].behavior.latency_ms,
-        )
-        # hedging: request k + hedge chunks up-front, keep first k valid
-        to_ask = order[: min(lay.n, lay.k + self.hedge)]
-        shards: dict[int, np.ndarray] = {}
-        asked = 0
-        for ck in to_ask + [c for c in order if c not in to_ask]:
-            if len(shards) == lay.k:
-                break
-            sp = self.sps[meta.placement[(chunkset, ck)]]
-            asked += 1
+        candidates = [
+            (
+                ck,
+                meta.placement[(chunkset, ck)],
+                self.transport.estimate_ms(meta.placement[(chunkset, ck)], lay.chunk_bytes),
+            )
+            for ck in range(lay.n)
+        ]
+
+        def issue(ck: int, sp_id: int, t_ms: float):
             self.stats.chunks_requested += 1
-            resp = sp.serve_chunk(blob_id, chunkset, ck, self._pay(meta.placement[(chunkset, ck)]))
-            if resp is None:
-                continue
-            data, _ = resp
+            return self.transport.request(
+                sp_id, blob_id, chunkset, ck, self._pay(sp_id), t_ms
+            )
+
+        def verify(ck: int, data) -> bool:
             commit, _ = cm.commit_chunk(data)
             if commit.root != meta.chunk_roots[(chunkset, ck)]:
                 self.stats.chunks_bad += 1  # §2.3: tampering detected
-                continue
-            shards[ck] = data
-            self.stats.chunks_used += 1
-        if len(shards) < lay.k:
+                return False
+            return True
+
+        result = self.scheduler.fetch(lay.k, candidates, issue, verify, start_ms=start_ms)
+        if len(result.shards) < lay.k:
             raise ReadError(
-                f"chunkset ({blob_id},{chunkset}): only {len(shards)}/{lay.k} valid chunks"
+                f"chunkset ({blob_id},{chunkset}): only {len(result.shards)}/{lay.k} valid chunks"
             )
-        self.stats.hedged_wasted += asked - lay.k
-        decoded = lay.code.reconstruct_data(shards)
+        self.stats.chunks_used += result.used
+        self.stats.hedged_wasted += result.wasted
+        self.stats.hedges_launched += result.hedges
+        self.stats.chunkset_fetches += 1
+        self.stats.fetch_ms_total += result.latency_ms
+        return result
+
+    def _cache_put(self, key: tuple[int, int], decoded: np.ndarray) -> None:
         self._cache[key] = decoded
         if len(self._cache) > self._cache_size:
             self._cache.popitem(last=False)
-        return decoded
 
-    def read_range(self, blob_id: int, offset: int, length: int) -> bytes:
+    def read_chunkset_timed(
+        self, blob_id: int, chunkset: int, start_ms: float = 0.0
+    ) -> tuple[np.ndarray, float]:
+        """Decoded (k, alpha, w) data of one chunkset + simulated fetch ms."""
+        parts, latency = self.read_chunksets_timed(blob_id, [chunkset], start_ms)
+        return parts[0], latency
+
+    def read_chunkset(self, blob_id: int, chunkset: int) -> np.ndarray:
+        return self.read_chunkset_timed(blob_id, chunkset)[0]
+
+    def read_chunksets_timed(
+        self, blob_id: int, chunksets: list[int], start_ms: float = 0.0
+    ) -> tuple[list[np.ndarray], float]:
+        """Read many chunksets; cache misses are fetched independently
+        (hedged fetches overlap -> latency is the slowest leg) and decoded
+        through the batched Clay path when more than one misses."""
+        out: dict[int, np.ndarray] = {}
+        fetched: dict[int, FetchResult] = {}
+        latency = 0.0
+        for cs in chunksets:
+            key = (blob_id, cs)
+            if key in self._cache:
+                self._cache.move_to_end(key)
+                self.stats.cache_hits += 1
+                out[cs] = self._cache[key]
+            elif cs not in fetched:
+                fetched[cs] = self._fetch_chunkset(blob_id, cs, start_ms)
+                latency = max(latency, fetched[cs].latency_ms)
+        if fetched:
+            order = sorted(fetched)
+            if self.batch_decode and len(order) > 1:
+                decoded = self.layout.code.reconstruct_data_batch(
+                    [fetched[cs].shards for cs in order], matmul=self.decode_matmul
+                )
+            else:
+                decoded = [
+                    self.layout.code.reconstruct_data(fetched[cs].shards) for cs in order
+                ]
+            for cs, dec in zip(order, decoded):
+                out[cs] = dec
+                self._cache_put((blob_id, cs), dec)
+        return [out[cs] for cs in chunksets], latency
+
+    def read_range_timed(
+        self, blob_id: int, offset: int, length: int, start_ms: float = 0.0
+    ) -> tuple[bytes, float]:
         meta = self.contract.blobs[blob_id]
         lay = self.layout
         first, last = lay.byte_range_to_chunksets(offset, length)
-        buf = bytearray()
-        for cs in range(first, last + 1):
-            buf += lay.assemble([self.read_chunkset(blob_id, cs)], lay.chunkset_bytes)
-        start = offset - first * lay.chunkset_bytes
-        end = min(start + length, meta.size_bytes - first * lay.chunkset_bytes)
-        return bytes(buf[start:end])
+        parts, latency = self.read_chunksets_timed(
+            blob_id, list(range(first, last + 1)), start_ms
+        )
+        return lay.extract_range(parts, first, offset, length, meta.size_bytes), latency
+
+    def read_range(self, blob_id: int, offset: int, length: int) -> bytes:
+        return self.read_range_timed(blob_id, offset, length)[0]
 
     def read_blob(self, blob_id: int) -> bytes:
         meta = self.contract.blobs[blob_id]

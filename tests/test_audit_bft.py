@@ -1,5 +1,7 @@
 """BFT properties of audit-score aggregation (§4.3, hypothesis)."""
 import numpy as np
+import pytest
+pytest.importorskip("hypothesis")  # property tests need the optional dep
 from hypothesis import given, settings, strategies as st
 
 from repro.core.audit import aggregate_scores, trim_f

@@ -1,6 +1,7 @@
 """Merkle vector-commitment properties (§3.4)."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests need the optional dep
 from hypothesis import given, settings, strategies as st
 
 from repro.core import commitments as cm

@@ -4,6 +4,7 @@ import pytest
 
 from repro.core.contract import BlobState, ShelbyContract
 from repro.core.placement import SPInfo, assign_chunkset
+pytest.importorskip("hypothesis")  # property tests need the optional dep
 from hypothesis import given, settings, strategies as st
 
 

@@ -1,6 +1,7 @@
 """GF(2^8) field axioms + matrix algebra (hypothesis property tests)."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests need the optional dep
 from hypothesis import given, settings, strategies as st
 
 from repro.core import gf

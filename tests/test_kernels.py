@@ -1,6 +1,7 @@
 """Per-kernel shape/dtype sweeps against the pure-jnp oracles (interpret mode)."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests need the optional dep
 from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp

@@ -1,5 +1,6 @@
 """Micropayment-channel safety (§3.2)."""
 import pytest
+pytest.importorskip("hypothesis")  # property tests need the optional dep
 from hypothesis import given, settings, strategies as st
 
 from repro.core.payments import ChannelError, MicropaymentChannel, PaymentLedger

@@ -1,0 +1,50 @@
+"""RPCNode.read_range boundary conditions (chunkset edges, final padding)."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def stored(cluster, rng):
+    contract, sps, rpc, client = cluster
+    cs = rpc.layout.chunkset_bytes
+    data = rng.integers(0, 256, int(2.5 * cs), dtype=np.uint8).tobytes()
+    meta = client.put(data)
+    return rpc, client, meta, data
+
+
+def test_read_spanning_chunkset_boundary(stored):
+    rpc, client, meta, data = stored
+    cs = rpc.layout.chunkset_bytes
+    for off, ln in [(cs - 1, 2), (cs - 100, 200), (2 * cs - 1, 2), (0, 2 * cs)]:
+        assert rpc.read_range(meta.blob_id, off, ln) == data[off : off + ln]
+
+
+def test_read_ending_inside_padded_final_chunkset(stored):
+    rpc, client, meta, data = stored
+    cs = rpc.layout.chunkset_bytes
+    # the blob ends mid-chunkset: reads must stop at size_bytes, padding invisible
+    off = 2 * cs + 100
+    assert rpc.read_range(meta.blob_id, off, 10_000) == data[off : off + 10_000]
+    # a read whose requested length overruns the blob is clipped at the end
+    tail = rpc.read_range(meta.blob_id, len(data) - 50, 10_000)
+    assert tail == data[-50:]
+
+
+def test_last_byte_and_single_bytes(stored):
+    rpc, client, meta, data = stored
+    assert rpc.read_range(meta.blob_id, len(data) - 1, 1) == data[-1:]
+    cs = rpc.layout.chunkset_bytes
+    for off in (0, cs - 1, cs, 2 * cs):
+        assert rpc.read_range(meta.blob_id, off, 1) == data[off : off + 1]
+
+
+def test_full_blob_equals_put_input(stored):
+    rpc, client, meta, data = stored
+    assert rpc.read_blob(meta.blob_id) == data
+    assert client.get(meta.blob_id) == data
+
+
+def test_zero_or_negative_length_rejected(stored):
+    rpc, client, meta, data = stored
+    with pytest.raises(ValueError):
+        rpc.read_range(meta.blob_id, 0, 0)
