@@ -22,6 +22,7 @@ import time
 import numpy as np
 
 from benchmarks.common import row
+from repro.configs.shelby import CONFIG, resolve_decode_matmul
 from repro.core.contract import ShelbyContract
 from repro.core.placement import SPInfo
 from repro.net.backbone import Backbone
@@ -116,6 +117,7 @@ def _fresh_fleet(layout, contract, bb, sps, policy):
                 node, contract, sps, layout,
                 cache_chunksets=16,
                 transport=BackboneTransport(sps, bb, node),
+                decode_matmul=resolve_decode_matmul(CONFIG.decode_matmul),
             )
         )
     bb.reset_accounting()
@@ -128,18 +130,24 @@ def run():
     for pname, policy_factory in POLICIES.items():
         for wname, workload in _workloads(metas).items():
             fleet = _fresh_fleet(layout, contract, bb, sps, policy_factory())
+            reader = ShelbyClient(contract, fleet, deposit=1e9)
             reqs = workload()
             t0 = time.perf_counter()
             span_end = 0.0
-            for req in reqs:
-                data, lat = fleet.read_range(
-                    req.blob_id, req.offset, req.length,
-                    client=req.client, t_ms=req.t_ms,
-                )
-                assert len(data) == min(
-                    req.length, contract.blobs[req.blob_id].size_bytes - req.offset
-                )
-                span_end = max(span_end, req.t_ms + lat)
+            with reader.session() as session:
+                for req in reqs:
+                    receipt = session.read(
+                        req.blob_id, req.offset, req.length,
+                        client=req.client, t_ms=req.t_ms,
+                    )
+                    assert len(receipt.data) == min(
+                        req.length, contract.blobs[req.blob_id].size_bytes - req.offset
+                    )
+                    span_end = max(span_end, req.t_ms + receipt.latency_ms)
+            settlement = session.settlement
+            # per-serving-node settlement matches the receipts (float-tol)
+            assert abs(settlement.total_node_income
+                       - sum(r.total_paid for r in session.receipts)) < 1e-3
             wall = time.perf_counter() - t0
             span_ms = span_end - reqs[0].t_ms
             goodput_mbps = fleet.bytes_served * 8e-3 / span_ms

@@ -44,7 +44,7 @@ for r in range(3):
 fleet = RPCFleet(rpcs, CacheAffinityPolicy(), backbone=backbone)
 
 print("uploading a hot content library (8 objects)...")
-client = ShelbyClient(contract, fleet.primary, deposit=1e9)
+client = ShelbyClient(contract, fleet, deposit=1e9)  # fleet-first client
 blobs = {}
 metas = []
 for b in range(8):
@@ -60,11 +60,13 @@ sps[5].crash()
 print("serving 300 Zipf-distributed requests from 3 regions...")
 reqs = zipf_hotset(metas, clients=["client0", "client1", "client2"],
                    num_requests=300, seed=11)
-for req in reqs:
-    data, _ = fleet.read_range(req.blob_id, req.offset, req.length,
+with client.session() as session:
+    for req in reqs:
+        receipt = session.read(req.blob_id, req.offset, req.length,
                                client=req.client, t_ms=req.t_ms)
-    expect = blobs[req.blob_id][req.offset : req.offset + req.length]
-    assert data == expect, "served bytes must match stored content"
+        expect = blobs[req.blob_id][req.offset : req.offset + req.length]
+        assert receipt.data == expect, "served bytes must match stored content"
+settlement = session.settlement
 
 p50, p99 = fleet.latency_percentiles(50.0, 99.0)
 print(f"cache hit rate: {fleet.cache_hit_rate():.0%} "
@@ -73,7 +75,12 @@ print(f"simulated latency: p50={p50:.1f} ms, p99={p99:.1f} ms "
       f"(straggler at 250 ms never gates a read)")
 print(f"hedged requests wasted: {fleet.hedged_wasted()}; "
       f"routed per node: {fleet.routed}")
-print(f"micropayments to SPs: ${sum(r.stats.payments for r in rpcs):.6f}")
+print("settled per-node serving income: "
+      + ", ".join(f"{nid}=${amt:.9f}" for nid, amt in sorted(settlement.node_income.items())))
+print(f"RPC->SP income realized at settlement: "
+      f"${sum(settlement.sp_income.values()):.6f} across {len(settlement.sp_income)} SPs")
+assert abs(settlement.total_deposited
+           - (settlement.total_refunded + settlement.total_node_income)) < 1e-3
 assert p99 < 250.0
 assert fleet.cache_hit_rate() > 0.5
 print("CDN serving over the dedicated backbone: OK")

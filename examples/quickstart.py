@@ -29,10 +29,13 @@ print(f"stored blob {meta.blob_id}: {meta.size_bytes} bytes as {meta.num_chunkse
       f"chunksets x {meta.n} chunks (overhead {layout.replication_overhead:.2f}x), "
       f"state={meta.state.value}")
 
-# 3. paid, verified reads (any byte range)
-assert client.get(meta.blob_id) == data
+# 3. paid, verified reads (any byte range): every read returns a receipt
+receipt = client.read(meta.blob_id)
+assert receipt.data == data
 assert client.get(meta.blob_id, 123_456, 789) == data[123_456 : 123_456 + 789]
-print(f"reads ok; RPC paid SPs ${rpc.stats.payments:.6f} over micropayment channels")
+print(f"reads ok; paid ${receipt.total_paid:.9f} to {list(receipt.payments)} "
+      f"(sim latency {receipt.latency_ms:.1f} ms); RPC paid SPs "
+      f"${rpc.stats.payments:.6f} over micropayment channels")
 
 # 4. kill an SP: reads still work (MDS: any k of n), then repair at MSR bandwidth
 victim = meta.placement[(0, 0)]
@@ -48,9 +51,17 @@ msr = sum(r.mode == "msr" for r in reports)
 print(f"repaired {len(reports)} chunks ({msr} at MSR bandwidth, "
       f"{sum(r.helper_bytes_read for r in reports)} helper bytes)")
 
-# 5. corruption is detected, not served
+# 5. corruption is detected, not served — and the corrupt chunk is NOT paid
 evil = meta.placement[(0, 1)]
 sps[evil].behavior.corrupt = True
 rpc._cache.clear()
 assert client.get(meta.blob_id) == data
 print(f"corrupt SP detected: {rpc.stats.chunks_bad} bad chunks rejected by commitments")
+
+# 6. close the session: broadcast the freshest refunds; conservation holds
+settlement = client.settle()
+assert abs(settlement.total_deposited
+           - (settlement.total_refunded + settlement.total_node_income)) < 1e-6
+print(f"settled: client refunded ${settlement.total_refunded:.6f}, RPC income "
+      f"${settlement.total_node_income:.9f}, SPs realized "
+      f"${sum(settlement.sp_income.values()):.6f}")

@@ -52,9 +52,12 @@ print(f"helper bytes read: {helper_bytes/1e6:.1f} MB vs Reed-Solomon {rs_bytes/1
       f"({1 - helper_bytes/rs_bytes:.0%} saved)")
 assert not rc.scan_lost_chunks(), "all chunks restored"
 
-# end-to-end integrity after the storm
-for meta in blobs:
-    rpc._cache.clear()
-    data = client.get(meta.blob_id)
-    assert len(data) == meta.size_bytes
-print("post-storm reads verified: OK")
+# end-to-end integrity after the storm: one batched fleet pass, paid on
+# delivery, then settle the session
+rpc._cache.clear()
+receipts = client.get_many([(meta.blob_id, 0, None) for meta in blobs])
+for meta, receipt in zip(blobs, receipts):
+    assert len(receipt.data) == meta.size_bytes
+settlement = client.settle()
+print(f"post-storm reads verified: OK (paid ${settlement.total_node_income:.9f}, "
+      f"SPs realized ${sum(settlement.sp_income.values()):.6f} at settlement)")

@@ -40,5 +40,7 @@ prompts = np.random.default_rng(0).integers(0, cfg.vocab, (4, 8)).astype(np.int3
 out = engine.generate(prompts, num_tokens=16)
 print(f"served batch: prompts {prompts.shape} -> completions {out.shape}")
 assert out.shape == (4, 24) and (out[:, :8] == prompts).all()
-print(f"decoded {engine.stats.decoded_tokens} tokens; "
-      f"read payments ${rpc.stats.payments:.6f}; cache hits {rpc.stats.cache_hits}")
+settlement = client.settle()  # weight-download reads settle per serving node
+print(f"decoded {engine.stats.decoded_tokens} tokens; weight-read payments "
+      f"${settlement.total_node_income:.9f} settled; SPs realized "
+      f"${sum(settlement.sp_income.values()):.6f}; cache hits {rpc.stats.cache_hits}")

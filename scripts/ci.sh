@@ -21,4 +21,10 @@ echo "== benchmark smoke (budget: ${SMOKE_BUDGET_S:-600}s) =="
 BACKBONE_SMOKE=1 timeout "${SMOKE_BUDGET_S:-600}" \
     python -m benchmarks.run backbone_serve read_throughput
 
+echo "== streaming smoke: video through BlobReader (budget: ${VIDEO_BUDGET_S:-120}s) =="
+# exercises the session API end to end: open/stream receipts, pay-on-delivery,
+# settlement conservation, and the 40 Mbps 4K bar under failures
+VIDEO_SMOKE=1 timeout "${VIDEO_BUDGET_S:-120}" \
+    python examples/video_streaming.py
+
 echo "CI OK"

@@ -37,6 +37,11 @@ class SimResult:
     ejected: set[int]
     bytes_served: int = 0  # read traffic through the RPC fleet (if any)
     read_p99_ms: float = 0.0  # simulated, from the fleet's request log
+    # paid-read economics ("reads are paid", §2.2/§3.2): serving income
+    # flows client->RPC->SP through settled micropayment channels only
+    sp_serving_income: dict[int, float] = dataclasses.field(default_factory=dict)
+    rpc_serving_income: dict[str, float] = dataclasses.field(default_factory=dict)
+    client_read_payments: float = 0.0  # sum over ReadReceipt payments
 
     def utility(self, sp: int) -> float:
         return self.utilities[sp]
@@ -54,6 +59,7 @@ def run_sim(
     seed: int = 0,
     num_rpcs: int = 1,
     read_requests_per_epoch: int = 0,
+    decode_matmul=None,  # e.g. configs.shelby.resolve_decode_matmul("pallas")
 ) -> SimResult:
     params = params or AuditParams(p_a=0.5, auditors_per_audit=4, C=50, p_ata=0.3)
     layout = layout or BlobLayout(k=4, m=2, chunkset_bytes_target=64 * 1024)
@@ -63,10 +69,12 @@ def run_sim(
     for i in range(n):
         contract.register_sp(SPInfo(sp_id=i, stake=10_000.0, dc=f"dc{i % 3}"))
         sps[i] = StorageProvider(i, behaviors.get(i, SPBehavior()))
-    rpcs = [RPCNode(f"rpc{r}", contract, sps, layout) for r in range(num_rpcs)]
+    rpcs = [
+        RPCNode(f"rpc{r}", contract, sps, layout, decode_matmul=decode_matmul)
+        for r in range(num_rpcs)
+    ]
     fleet = RPCFleet(rpcs, CacheAffinityPolicy())
-    rpc = fleet.primary
-    client = ShelbyClient(contract, rpc, deposit=1e9)
+    client = ShelbyClient(contract, fleet, deposit=1e9)
 
     # crashes take effect AFTER the write phase (the contract would never
     # assign chunks to an SP that is already down)
@@ -117,8 +125,9 @@ def run_sim(
             sp.scoreboard.bits.clear()
 
         if read_requests_per_epoch:
-            # paid Zipf read traffic through the RPC fleet: serving income
-            # accrues to SPs on top of storage rewards ("reads are paid")
+            # paid Zipf read traffic through the client session: the client
+            # pays serving RPC nodes on delivery ("reads are paid"); a
+            # dropped request debits nothing
             metas = list(contract.blobs.values())
             reqs = zipf_hotset(
                 metas,
@@ -128,12 +137,19 @@ def run_sim(
             )
             for req in reqs:
                 try:
-                    fleet.read_range(req.blob_id, req.offset, req.length)
+                    client.read(req.blob_id, req.offset, req.length,
+                                client=req.client, t_ms=req.t_ms)
                 except ReadError:
                     pass  # unrecoverable under current failures: dropped request
 
-    for i in range(n):
-        utilities[i] += sps[i].earned_reads
+    # settle the read session: client->RPC channels broadcast their freshest
+    # refunds and the RPC->SP channels cascade, so serving income reaches SP
+    # utilities exclusively through settled channels (no earned_reads shortcut)
+    session = client.current_session
+    receipts = list(session.receipts)
+    settlement = client.settle()
+    for i, amt in settlement.sp_income.items():
+        utilities[i] += amt
 
     slashed_total = {i: 10_000.0 - contract.stakes.get(i, 10_000.0) for i in range(n)}
     p99 = fleet.latency_percentiles(99.0)[0] if fleet.request_latencies_ms else 0.0
@@ -144,6 +160,9 @@ def run_sim(
         ejected=set(contract.ejected),
         bytes_served=fleet.bytes_served,
         read_p99_ms=p99,
+        sp_serving_income=dict(settlement.sp_income),
+        rpc_serving_income=dict(settlement.node_income),
+        client_read_payments=sum(r.total_paid for r in receipts),
     )
 
 

@@ -1,10 +1,11 @@
 """Blob-backed training-data pipeline (§6 "AI and Data Marketplaces").
 
 Token corpora live in Shelby as blobs of little-endian int32 token ids; the
-pipeline is a *paying read client*: every batch is a verified byte-range
-read through an RPC node (hedged k-of-n fetches under the hood, so a slow or
-dead SP never stalls the input pipeline — the paper's request-hedging as
-straggler mitigation).
+pipeline is a *paying read client*: every batch is one ``client.get_many``
+call — all of the batch's example ranges are routed across the RPC fleet in
+a single pass (hedged k-of-n fetches under the hood, so a slow or dead SP
+never stalls the input pipeline, and the chunksets the batch misses decode
+together in wide GF batch-decodes).
 
 A background prefetch thread keeps `prefetch` batches decoded ahead of the
 training loop, mirroring the paper's "RPCs maintain small caching layers".
@@ -56,20 +57,18 @@ class BlobTokenDataset:
         self._cursor = shard * batch
         self._thread: threading.Thread | None = None
 
-    def _fetch_example(self, idx: int) -> np.ndarray:
-        off = int(idx) * self.tokens_per_example * 4
-        raw = self.client.get(self.blob_id, off, self.tokens_per_example * 4)
-        return np.frombuffer(raw, dtype=np.int32)
-
     def _next_batch(self) -> tuple[np.ndarray, np.ndarray]:
-        rows = []
+        ranges = []
         for _ in range(self.batch):
             if self._cursor >= self.num_examples:
                 self._cursor = self.shard * self.batch  # wrap epoch
                 self._order = self._rng.permutation(self.num_examples)
-            rows.append(self._fetch_example(self._order[self._cursor]))
+            off = int(self._order[self._cursor]) * self.tokens_per_example * 4
+            ranges.append((self.blob_id, off, self.tokens_per_example * 4))
             self._cursor += self.num_shards  # stride across data-parallel shards
-        arr = np.stack(rows)
+        # one fleet pass for the whole batch: cross-request batched decode
+        receipts = self.client.get_many(ranges)
+        arr = np.stack([np.frombuffer(r.data, dtype=np.int32) for r in receipts])
         return arr[:, :-1], arr[:, 1:]
 
     def _worker(self, n: int):

@@ -15,9 +15,11 @@ import argparse
 import numpy as np
 
 from repro.configs import ALL_ARCHS, get, get_smoke
+from repro.configs.shelby import CONFIG, resolve_decode_matmul
 from repro.core.contract import ShelbyContract
 from repro.core.placement import SPInfo
 from repro.data.pipeline import BlobTokenDataset, write_token_corpus
+from repro.net.fleet import CacheAffinityPolicy, RPCFleet
 from repro.storage.blob import BlobLayout
 from repro.storage.checkpoint import CheckpointManager
 from repro.storage.repair import RepairCoordinator
@@ -27,16 +29,28 @@ from repro.storage.sp import StorageProvider
 from repro.train.loop import Trainer
 
 
-def build_cluster(num_sps: int = 8, layout: BlobLayout | None = None):
+def build_cluster(num_sps: int = 8, layout: BlobLayout | None = None,
+                  num_rpcs: int = 1):
+    """A simulated deployment fronted by the fleet-first client.
+
+    The batched Clay decode's GF matmul comes from `configs/shelby.py`
+    (numpy on CPU, the Pallas kernel on real TPU runtimes).
+    """
     layout = layout or BlobLayout(k=4, m=2, chunkset_bytes_target=256 * 1024)
     contract = ShelbyContract()
     sps = {}
     for i in range(num_sps):
         contract.register_sp(SPInfo(sp_id=i, stake=1000.0, dc=f"dc{i % 3}", rack=f"r{i % 4}"))
         sps[i] = StorageProvider(i)
-    rpc = RPCNode("rpc0", contract, sps, layout, cache_chunksets=32)
-    client = ShelbyClient(contract, rpc, deposit=1e9)
-    return contract, sps, rpc, client
+    matmul = resolve_decode_matmul(CONFIG.decode_matmul)
+    rpcs = [
+        RPCNode(f"rpc{r}", contract, sps, layout, cache_chunksets=32,
+                decode_matmul=matmul)
+        for r in range(num_rpcs)
+    ]
+    fleet = RPCFleet(rpcs, CacheAffinityPolicy())
+    client = ShelbyClient(contract, fleet, deposit=1e9)
+    return contract, sps, fleet.primary, client
 
 
 def main(argv=None):
@@ -86,8 +100,11 @@ def main(argv=None):
         state, rep = trainer.run(state, batches, args.steps)
         losses = rep.losses
 
+    settlement = client.settle()  # broadcast refunds; SPs realize income
     print(f"[driver] done: steps={len(losses)} first={losses[0]:.4f} last={losses[-1]:.4f} "
-          f"reads_paid=${rpc.stats.payments:.6f} cache_hits={rpc.stats.cache_hits}")
+          f"reads_paid=${settlement.total_node_income:.6f} "
+          f"sp_income=${sum(settlement.sp_income.values()):.6f} "
+          f"cache_hits={rpc.stats.cache_hits}")
     k = max(len(losses) // 4, 1)  # head/tail means: single steps are noisy
     assert sum(losses[-k:]) / k < sum(losses[:k]) / k, "loss must decrease"
     return losses

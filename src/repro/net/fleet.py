@@ -20,6 +20,7 @@ the client<->node round trip when a backbone is attached).
 """
 from __future__ import annotations
 
+import dataclasses
 import hashlib
 from typing import TYPE_CHECKING
 
@@ -29,6 +30,25 @@ from repro.net.backbone import Backbone
 
 if TYPE_CHECKING:  # avoid a cycle: storage.rpc imports repro.net.scheduler
     from repro.storage.rpc import RPCNode
+
+
+@dataclasses.dataclass
+class ServedRange:
+    """One byte-range served by the fleet, with per-node attribution.
+
+    `chunksets_by_node` maps rpc_id -> number of this range's chunksets that
+    node served — the basis for the client's per-serving-node payments.
+    """
+
+    blob_id: int
+    offset: int
+    length: int
+    data: bytes
+    latency_ms: float
+    chunksets_by_node: dict[str, int]
+    cache_hits: int = 0
+    hedges_launched: int = 0
+    hedged_wasted: int = 0
 
 
 class LatencyAwarePolicy:
@@ -99,6 +119,9 @@ class RPCFleet:
         """The node that fronts write dispersal (any node can; pick node 0)."""
         return self.rpcs[0]
 
+    def node(self, rpc_id: str) -> RPCNode:
+        return self.rpcs[self.node_ids.index(rpc_id)]
+
     # -- serving ------------------------------------------------------------------
     def _route(self, blob_id: int, chunkset: int, client: str | None) -> int:
         i = self.policy.pick((blob_id, chunkset), client, self)
@@ -117,40 +140,88 @@ class RPCFleet:
             return 0.0
         return self.backbone.propagation_ms(client, self.node_ids[i])
 
+    def serve_ranges(
+        self,
+        ranges: list[tuple[int, int, int]],  # (blob_id, offset, length)
+        *,
+        client: str | None = None,
+        t_ms: float = 0.0,
+    ) -> list[ServedRange]:
+        """Serve many byte ranges — possibly of different blobs — in ONE
+        fleet pass.
+
+        `t_ms` is the batch's arrival time on the global simulated clock;
+        concurrent requests queue against each other on backbone trunks.
+        Every (blob, chunkset) across ALL ranges is routed individually
+        (deduplicated — two ranges sharing a chunkset fetch it once), then
+        each node reads its entire share in one `read_items_detailed` call,
+        so wide GF batch-decodes span requests.  Chunkset legs overlap
+        (hedged fetches are independent): a range's latency is the max over
+        its own chunksets' legs plus the client<->node round trip.
+        """
+        lay = self.primary.layout
+        contract = self.primary.contract
+        per_range_items: list[list[tuple[int, int]]] = []
+        routed_node: dict[tuple[int, int], int] = {}  # (blob, cs) -> node index
+        by_node: dict[int, list[tuple[int, int]]] = {}
+        for blob_id, offset, length in ranges:
+            first, last = lay.byte_range_to_chunksets(offset, length)
+            items = [(blob_id, cs) for cs in range(first, last + 1)]
+            per_range_items.append(items)
+            for key in items:
+                if key not in routed_node:
+                    i = self._route(key[0], key[1], client)
+                    routed_node[key] = i
+                    by_node.setdefault(i, []).append(key)
+
+        decoded: dict[tuple[int, int], np.ndarray] = {}
+        item_stats: dict[tuple[int, int], object] = {}
+        prop_of: dict[int, float] = {}
+        for i, items in by_node.items():
+            prop = self._prop(i, client)
+            prop_of[i] = prop
+            out, stats = self.rpcs[i].read_items_detailed(items, t_ms + prop)
+            self._observe(i, max(s.latency_ms for s in stats.values()))
+            decoded.update(out)
+            item_stats.update(stats)
+
+        served: list[ServedRange] = []
+        for (blob_id, offset, length), items in zip(ranges, per_range_items):
+            meta = contract.blobs[blob_id]
+            first = items[0][1]
+            data = lay.extract_range(
+                [decoded[key] for key in items], first, offset, length,
+                meta.size_bytes,
+            )
+            by_node_count: dict[str, int] = {}
+            latency, hits, hedges, wasted = 0.0, 0, 0, 0
+            for key in items:
+                i = routed_node[key]
+                nid = self.node_ids[i]
+                by_node_count[nid] = by_node_count.get(nid, 0) + 1
+                s = item_stats[key]
+                latency = max(latency, s.latency_ms + 2.0 * prop_of[i])
+                hits += s.cache_hit
+                hedges += s.hedges
+                wasted += s.wasted
+            served.append(
+                ServedRange(
+                    blob_id=blob_id, offset=offset, length=length, data=data,
+                    latency_ms=latency, chunksets_by_node=by_node_count,
+                    cache_hits=hits, hedges_launched=hedges, hedged_wasted=wasted,
+                )
+            )
+            self.bytes_served += len(data)
+            self.request_latencies_ms.append(latency)
+        return served
+
     def read_range(
         self, blob_id: int, offset: int, length: int, *, client: str | None = None,
         t_ms: float = 0.0,
     ) -> tuple[bytes, float]:
-        """Serve [offset, offset+length) and return (bytes, sim_latency_ms).
-
-        `t_ms` is the request's arrival time on the global simulated clock;
-        concurrent requests queue against each other on backbone trunks.
-        Chunksets are routed individually, then fetched per node in one
-        call so each node batch-decodes its share in wide GF solves.
-        Chunkset legs overlap (hedged fetches are independent), so request
-        latency is the max leg, not the sum.
-        """
-        lay = self.primary.layout
-        meta = self.primary.contract.blobs[blob_id]
-        first, last = lay.byte_range_to_chunksets(offset, length)
-        css = list(range(first, last + 1))
-        by_node: dict[int, list[int]] = {}
-        for cs in css:
-            by_node.setdefault(self._route(blob_id, cs, client), []).append(cs)
-        decoded: dict[int, np.ndarray] = {}
-        latency = 0.0
-        for i, group in by_node.items():
-            prop = self._prop(i, client)
-            parts, ms = self.rpcs[i].read_chunksets_timed(blob_id, group, t_ms + prop)
-            self._observe(i, ms)
-            latency = max(latency, ms + 2.0 * prop)
-            decoded.update(zip(group, parts))
-        data = lay.extract_range(
-            [decoded[cs] for cs in css], first, offset, length, meta.size_bytes
-        )
-        self.bytes_served += len(data)
-        self.request_latencies_ms.append(latency)
-        return data, latency
+        """Serve [offset, offset+length) and return (bytes, sim_latency_ms)."""
+        sr = self.serve_ranges([(blob_id, offset, length)], client=client, t_ms=t_ms)[0]
+        return sr.data, sr.latency_ms
 
     # -- metrics -------------------------------------------------------------------
     def cache_hit_rate(self) -> float:

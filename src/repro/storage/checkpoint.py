@@ -112,8 +112,11 @@ class CheckpointManager:
         """Elastic restore: `reading_hosts` may differ from writer shard count;
         each reading host pulls a byte range that may span writer shards."""
         rec = self.records[step]
-        blobs = [self.client.get(bid) for bid in rec.shard_blob_ids]
-        data = b"".join(blobs)[: rec.total_bytes]
+        # all shards in one fleet pass: their chunksets batch-decode together
+        receipts = self.client.get_many(
+            [(bid, 0, None) for bid in rec.shard_blob_ids]
+        )
+        data = b"".join(r.data for r in receipts)[: rec.total_bytes]
         if reading_hosts is not None and reading_hosts != self.num_host_shards:
             # emulate: each reading host fetches its own byte range, then the
             # ranges concatenate to the full stream (any k chunks suffice).

@@ -76,7 +76,7 @@ class RepairCoordinator:
             ids = code.repair_subchunk_ids(chunk)
             subs = {}
             for ck, sp in helpers_alive.items():
-                resp = sp.serve_subchunks(blob_id, chunkset, ck, ids, payment=0.0)
+                resp = sp.serve_subchunks(blob_id, chunkset, ck, ids)
                 if resp is None:
                     raise RepairError("helper vanished mid-repair")
                 subs[ck] = resp[0]
@@ -87,7 +87,7 @@ class RepairCoordinator:
             # MDS fallback: full chunks from any k helpers
             shards = {}
             for ck, sp in list(helpers_alive.items())[: lay.k]:
-                resp = sp.serve_chunk(blob_id, chunkset, ck, payment=0.0)
+                resp = sp.serve_chunk(blob_id, chunkset, ck)
                 shards[ck] = resp[0]
                 bytes_read += resp[0].nbytes
             repaired = code.decode(shards)[chunk]

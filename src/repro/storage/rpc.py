@@ -12,12 +12,18 @@ detected, §2.3), Clay-decode, and assemble.  Chunk requests travel through
 a pluggable :class:`Transport` — direct in-process calls, or the simulated
 dedicated backbone of ``repro.net.backbone`` with per-link latency and
 bandwidth accounting on a simulated clock.  Reads spanning several
-chunksets take the **batched decode path**: chunksets with the same erasure
-pattern are Clay-decoded in one wide GF call (``ClayCode.decode_batch``,
-optionally through the Pallas ``gf_matmul`` kernel) instead of
-one-at-a-time numpy.  Every chunk read is paid through an RPC->SP
-micropayment channel; a small hot-cache of decoded chunksets fronts popular
-content (§5.3).
+chunksets — even of *different blobs*, via ``read_items_detailed`` — take
+the **batched decode path**: chunksets with the same erasure pattern are
+Clay-decoded in one wide GF call (``ClayCode.decode_batch``, optionally
+through the Pallas ``gf_matmul`` kernel) instead of one-at-a-time numpy.
+
+Payments are **on delivery** (§2.2/§3.2): a chunk is paid through the
+RPC->SP micropayment channel only once it arrived AND verified against its
+commitment — crashed, missing, or corrupt responses earn the SP nothing.
+Channel settlement (`settle_sp_channels`) broadcasts the freshest refunds
+and realizes each SP's serving income; client sessions paying this node
+credit `serving_income` when *their* channel settles.  A small hot-cache of
+decoded chunksets fronts popular content (§5.3).
 """
 from __future__ import annotations
 
@@ -43,13 +49,23 @@ class ReadStats:
     chunks_requested: int = 0
     chunks_used: int = 0
     chunks_bad: int = 0
-    bytes_paid_for: int = 0
-    payments: float = 0.0
+    bytes_paid_for: int = 0  # bytes of chunks actually paid (delivered + verified)
+    payments: float = 0.0  # RPC->SP micropayments (pay-on-delivery)
     cache_hits: int = 0
-    hedged_wasted: int = 0  # paid requests that contributed no shard (incl. failures)
+    hedged_wasted: int = 0  # requests that contributed no shard (incl. failures) — unpaid
     hedges_launched: int = 0  # deadline-triggered hedge requests only
     chunkset_fetches: int = 0
     fetch_ms_total: float = 0.0  # simulated clock, not wall time
+
+
+@dataclasses.dataclass(frozen=True)
+class ItemStats:
+    """Per-(blob, chunkset) outcome of one `read_items_detailed` call."""
+
+    cache_hit: bool
+    latency_ms: float  # simulated fetch time (0 for cache hits)
+    hedges: int = 0
+    wasted: int = 0
 
 
 # -- transports: how chunk requests reach SPs -------------------------------------
@@ -63,11 +79,10 @@ class DirectTransport:
         return self.sps[sp_id].behavior.latency_ms
 
     def request(
-        self, sp_id: int, blob_id: int, chunkset: int, chunk: int,
-        payment: float, t_ms: float,
+        self, sp_id: int, blob_id: int, chunkset: int, chunk: int, t_ms: float,
     ) -> tuple[np.ndarray | None, float]:
         sp = self.sps[sp_id]
-        resp = sp.serve_chunk(blob_id, chunkset, chunk, payment)
+        resp = sp.serve_chunk(blob_id, chunkset, chunk)
         done = t_ms + sp.behavior.latency_ms
         return (None, done) if resp is None else (resp[0], done)
 
@@ -100,13 +115,12 @@ class BackboneTransport:
         )
 
     def request(
-        self, sp_id: int, blob_id: int, chunkset: int, chunk: int,
-        payment: float, t_ms: float,
+        self, sp_id: int, blob_id: int, chunkset: int, chunk: int, t_ms: float,
     ) -> tuple[np.ndarray | None, float]:
         bb, node = self.backbone, self.sp_node[sp_id]
         arrived = bb.transfer(self.rpc_node, node, self.REQUEST_BYTES, t_ms)
         sp = self.sps[sp_id]
-        resp = sp.serve_chunk(blob_id, chunkset, chunk, payment)
+        resp = sp.serve_chunk(blob_id, chunkset, chunk)
         if resp is None:
             return None, bb.transfer(node, self.rpc_node, self.NACK_BYTES, arrived)
         data, service_ms = resp
@@ -141,8 +155,10 @@ class RPCNode:
         self.batch_decode = batch_decode
         self.decode_matmul = decode_matmul  # e.g. repro.kernels.ops.gf_matmul_np
         self.ledger = PaymentLedger()
+        self._sp_deposit = sp_deposit
         for sp_id in sps:
             self.ledger.open(str(sp_id), sp_deposit)  # channels at join time (§2.3)
+        self.serving_income = 0.0  # realized when client sessions settle (§3.2)
         self._cache: OrderedDict[tuple[int, int], np.ndarray] = OrderedDict()
         self._cache_size = cache_chunksets
         self.stats = ReadStats()
@@ -166,10 +182,30 @@ class RPCNode:
 
     # -- read path (§2.3 + §3.5 hedging) ------------------------------------------
     def _pay(self, sp_id: int) -> float:
+        """Pay ONE delivered+verified chunk over the RPC->SP channel."""
         self.ledger.pay(str(sp_id), self.price_per_chunk)
+        self.sps[sp_id].receive_payment(self.price_per_chunk)
         self.stats.payments += self.price_per_chunk
         self.stats.bytes_paid_for += self.layout.chunk_bytes
         return self.price_per_chunk
+
+    def settle_sp_channels(self) -> dict[int, float]:
+        """Broadcast the freshest refund of every paid RPC->SP channel.
+
+        Each SP's `settled_income` is credited with exactly what the channel
+        paid out (deposit - freshest refund); fresh channels reopen with the
+        original deposit so serving continues.  Returns sp_id -> income.
+        """
+        income: dict[int, float] = {}
+        for sp_id in list(self.sps):
+            ch = self.ledger.channels[str(sp_id)]
+            if ch.paid <= 0.0:
+                continue
+            _, server_gets = ch.settle(ch.latest_refund)
+            self.sps[sp_id].credit_settlement(server_gets)
+            income[sp_id] = server_gets  # one channel per SP
+            self.ledger.open(str(sp_id), self._sp_deposit)  # fresh channel
+        return income
 
     def _fetch_chunkset(
         self, blob_id: int, chunkset: int, start_ms: float = 0.0
@@ -190,15 +226,14 @@ class RPCNode:
 
         def issue(ck: int, sp_id: int, t_ms: float):
             self.stats.chunks_requested += 1
-            return self.transport.request(
-                sp_id, blob_id, chunkset, ck, self._pay(sp_id), t_ms
-            )
+            return self.transport.request(sp_id, blob_id, chunkset, ck, t_ms)
 
         def verify(ck: int, data) -> bool:
             commit, _ = cm.commit_chunk(data)
             if commit.root != meta.chunk_roots[(chunkset, ck)]:
                 self.stats.chunks_bad += 1  # §2.3: tampering detected
                 return False
+            self._pay(meta.placement[(chunkset, ck)])  # pay on delivery
             return True
 
         result = self.scheduler.fetch(lay.k, candidates, issue, verify, start_ms=start_ms)
@@ -228,38 +263,64 @@ class RPCNode:
     def read_chunkset(self, blob_id: int, chunkset: int) -> np.ndarray:
         return self.read_chunkset_timed(blob_id, chunkset)[0]
 
-    def read_chunksets_timed(
-        self, blob_id: int, chunksets: list[int], start_ms: float = 0.0
-    ) -> tuple[list[np.ndarray], float]:
-        """Read many chunksets; cache misses are fetched independently
-        (hedged fetches overlap -> latency is the slowest leg) and decoded
-        through the batched Clay path when more than one misses."""
-        out: dict[int, np.ndarray] = {}
-        fetched: dict[int, FetchResult] = {}
-        latency = 0.0
-        for cs in chunksets:
-            key = (blob_id, cs)
+    def read_items_detailed(
+        self, items: list[tuple[int, int]], start_ms: float = 0.0
+    ) -> tuple[dict[tuple[int, int], np.ndarray], dict[tuple[int, int], ItemStats]]:
+        """Read many (blob_id, chunkset) items — possibly spanning blobs.
+
+        Cache misses are fetched independently (hedged fetches overlap ->
+        each item's latency is its own slowest leg) and decoded through the
+        batched Clay path when more than one misses: chunksets of
+        *different blobs* with the same erasure pattern still stack into one
+        wide GF matmul, so a `get_many` spanning requests amortizes kernel
+        dispatch across all of them.
+        """
+        out: dict[tuple[int, int], np.ndarray] = {}
+        stats: dict[tuple[int, int], ItemStats] = {}
+        fetched: dict[tuple[int, int], FetchResult] = {}
+        for key in items:
+            if key in out or key in fetched:
+                continue
             if key in self._cache:
                 self._cache.move_to_end(key)
                 self.stats.cache_hits += 1
-                out[cs] = self._cache[key]
-            elif cs not in fetched:
-                fetched[cs] = self._fetch_chunkset(blob_id, cs, start_ms)
-                latency = max(latency, fetched[cs].latency_ms)
+                out[key] = self._cache[key]
+                stats[key] = ItemStats(cache_hit=True, latency_ms=0.0)
+            else:
+                res = self._fetch_chunkset(key[0], key[1], start_ms)
+                fetched[key] = res
+                stats[key] = ItemStats(
+                    cache_hit=False,
+                    latency_ms=res.latency_ms,
+                    hedges=res.hedges,
+                    wasted=res.wasted,
+                )
         if fetched:
             order = sorted(fetched)
             if self.batch_decode and len(order) > 1:
                 decoded = self.layout.code.reconstruct_data_batch(
-                    [fetched[cs].shards for cs in order], matmul=self.decode_matmul
+                    [fetched[key].shards for key in order], matmul=self.decode_matmul
                 )
             else:
                 decoded = [
-                    self.layout.code.reconstruct_data(fetched[cs].shards) for cs in order
+                    self.layout.code.reconstruct_data(fetched[key].shards)
+                    for key in order
                 ]
-            for cs, dec in zip(order, decoded):
-                out[cs] = dec
-                self._cache_put((blob_id, cs), dec)
-        return [out[cs] for cs in chunksets], latency
+            for key, dec in zip(order, decoded):
+                out[key] = dec
+                self._cache_put(key, dec)
+        return out, stats
+
+    def read_chunksets_timed(
+        self, blob_id: int, chunksets: list[int], start_ms: float = 0.0
+    ) -> tuple[list[np.ndarray], float]:
+        """Single-blob convenience over `read_items_detailed`; the returned
+        latency is the slowest item's leg (hedged fetches overlap)."""
+        out, stats = self.read_items_detailed(
+            [(blob_id, cs) for cs in chunksets], start_ms
+        )
+        latency = max((s.latency_ms for s in stats.values()), default=0.0)
+        return [out[(blob_id, cs)] for cs in chunksets], latency
 
     def read_range_timed(
         self, blob_id: int, offset: int, length: int, start_ms: float = 0.0

@@ -59,7 +59,11 @@ class StorageProvider:
         # auditor state
         self.scoreboard = Scoreboard(owner=sp_id)
         self.retained: dict[tuple[int, int], AuditProof] = {}  # (auditee,pos)->proof
+        # serving income, channel-accounted (§3.2): `earned_reads` is the
+        # accrued micropayment balance (refunds held but not broadcast);
+        # `settled_income` is what channel settlement actually realized.
         self.earned_reads = 0.0
+        self.settled_income = 0.0
 
     # -- write path -------------------------------------------------------------
     def store_chunk(self, blob_id: int, chunkset: int, chunk: int, data: np.ndarray) -> bool:
@@ -89,29 +93,40 @@ class StorageProvider:
         return tree
 
     # -- read path (paid, §2.4) ----------------------------------------------------
-    def serve_chunk(self, blob_id: int, chunkset: int, chunk: int, payment: float):
-        """Returns (chunk_bytes, latency_ms) or None."""
+    def serve_chunk(self, blob_id: int, chunkset: int, chunk: int):
+        """Returns (chunk_bytes, latency_ms) or None.
+
+        Payment is NOT taken here: the reader pays on delivery, after the
+        chunk verified against its commitment (see `receive_payment`) — a
+        crashed or corrupt SP earns nothing.
+        """
         if self.behavior.crashed:
             return None
         key = (blob_id, chunkset, chunk)
         if key not in self._chunks:
             return None
-        self.earned_reads += payment
         data = self._chunks[key]
         if self.behavior.corrupt:
             data = data.copy()
             data.reshape(-1)[0] ^= 0xFF
         return data, self.behavior.latency_ms
 
-    def serve_subchunks(self, blob_id: int, chunkset: int, chunk: int, ids: list[int], payment: float):
+    def serve_subchunks(self, blob_id: int, chunkset: int, chunk: int, ids: list[int]):
         """MSR repair helper read: only the requested sub-chunks (planes)."""
         if self.behavior.crashed:
             return None
         key = (blob_id, chunkset, chunk)
         if key not in self._chunks:
             return None
-        self.earned_reads += payment
         return self._chunks[key][ids], self.behavior.latency_ms
+
+    def receive_payment(self, amount: float) -> None:
+        """A channel micropayment arrived (fresh refund signed over to us)."""
+        self.earned_reads += amount
+
+    def credit_settlement(self, amount: float) -> None:
+        """An RPC->SP channel settled on-chain; income is now realized."""
+        self.settled_income += amount
 
     # -- auditee role (§4.1) ---------------------------------------------------------
     def respond_challenge(self, ch: Challenge) -> AuditProof | None:
