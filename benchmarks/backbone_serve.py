@@ -17,6 +17,7 @@ itself runs.  ``BACKBONE_SMOKE=1`` shrinks the traffic for CI.
 from __future__ import annotations
 
 import os
+import sys
 import time
 
 import numpy as np
@@ -25,7 +26,7 @@ from benchmarks.common import row
 from repro.configs.shelby import CONFIG, resolve_decode_matmul
 from repro.core.contract import ShelbyContract
 from repro.core.placement import SPInfo
-from repro.net.backbone import Backbone
+from repro.net.backbone import Backbone, NICSpec
 from repro.net.fleet import (
     CacheAffinityPolicy,
     LatencyAwarePolicy,
@@ -41,7 +42,7 @@ from repro.net.workloads import (
 from repro.storage.blob import BlobLayout
 from repro.storage.rpc import BackboneTransport, RPCNode
 from repro.storage.sdk import ShelbyClient
-from repro.storage.sp import StorageProvider
+from repro.storage.sp import ServiceSpec, StorageProvider
 
 SMOKE = bool(int(os.environ.get("BACKBONE_SMOKE", "0")))
 NUM_SPS = 12
@@ -56,8 +57,14 @@ POLICIES = {
 }
 
 
-def _world():
-    """Contract + SPs + stored blobs + backbone — shared across combos."""
+def _world(nic: NICSpec | None = None, sp_slots: int | None = None):
+    """Contract + SPs + stored blobs + backbone — shared across combos.
+
+    `nic`/`sp_slots` turn on the event engine's contention model (NIC
+    serialization per node, FIFO disk-slot queues per SP) for the
+    concurrent section; the sequential grid keeps them off so its numbers
+    stay comparable across PRs.
+    """
     layout = BlobLayout(k=4, m=2, chunkset_bytes_target=64 * 1024)
     contract = ShelbyContract()
     bb = Backbone.mesh(3, base_latency_ms=6.0, gbps=25.0)
@@ -66,9 +73,10 @@ def _world():
     for i in range(NUM_SPS):
         dc = f"dc{i % 3}"
         contract.register_sp(SPInfo(sp_id=i, stake=1000.0, dc=dc, rack=f"r{i % 4}"))
-        sps[i] = StorageProvider(i)
+        service = ServiceSpec(slots=sp_slots) if sp_slots else None
+        sps[i] = StorageProvider(i, service=service)
         sps[i].behavior.latency_ms = float(rng.uniform(1.0, 12.0))
-        bb.register_node(f"sp{i}", dc)
+        bb.register_node(f"sp{i}", dc, nic=nic)
     for c in range(3):
         bb.register_node(f"client{c}", f"dc{c}")
     # a throwaway writer node disperses the blobs
@@ -106,16 +114,17 @@ def _workloads(metas):
     }
 
 
-def _fresh_fleet(layout, contract, bb, sps, policy):
+def _fresh_fleet(layout, contract, bb, sps, policy, *, nic: NICSpec | None = None,
+                 cache_chunksets: int = 16):
     rpcs = []
     for r in range(NUM_RPCS):
         node = f"rpc{r}"
         if node not in bb._node_dc:
-            bb.register_node(node, f"dc{r}")
+            bb.register_node(node, f"dc{r}", nic=nic)
         rpcs.append(
             RPCNode(
                 node, contract, sps, layout,
-                cache_chunksets=16,
+                cache_chunksets=cache_chunksets,
                 transport=BackboneTransport(sps, bb, node),
                 decode_matmul=resolve_decode_matmul(CONFIG.decode_matmul),
             )
@@ -167,5 +176,73 @@ def run():
         assert p99 < 250.0, f"{pname}: zipf p99 {p99:.1f}ms not shielded from straggler"
 
 
-if __name__ == "__main__":
+def run_concurrent():
+    """Open-loop Poisson Zipf storm through the SHARED event engine.
+
+    All requests of a run live on one heap: hedge timers interleave, SPs
+    queue on their disk slots, nodes serialize on 10 Gbps NICs.  Asserts
+    the determinism digest (two identical runs on fresh fleets -> byte-
+    identical per-request timings and link utilization), then ramps the
+    offered load and reports open-loop p50/p99 so the bench trajectory
+    captures *contention*, not just topology.
+    """
+    nic = CONFIG.nic()  # 10 Gbps full-duplex per node by default
+    world = _world(nic=nic, sp_slots=2)
+    layout, contract, bb, sps, metas = world
+    num_requests = 100 if SMOKE else 400
+    rates_rps = [200, 1000, 5000]  # offered load ramp
+
+    def one_run(rate_rps, trace=False):
+        fleet = _fresh_fleet(layout, contract, bb, sps, CacheAffinityPolicy(),
+                             nic=nic, cache_chunksets=8)
+        reader = ShelbyClient(contract, fleet, deposit=1e9)
+        reqs = zipf_hotset(
+            metas, clients=["client0", "client1", "client2"],
+            num_requests=num_requests, interarrival_ms=1000.0 / rate_rps,
+            seed=11, arrival="poisson",
+        )
+        with reader.session() as session:
+            receipts, result = session.replay(reqs)
+        settlement = session.settlement
+        assert abs(settlement.total_node_income
+                   - sum(r.total_paid for r in session.receipts)) < 1e-3
+        return fleet, result
+
+    # determinism gate: identical workload on a fresh fleet, twice
+    _, a = one_run(rates_rps[0])
+    _, b = one_run(rates_rps[0])
+    assert a.digest() == b.digest(), (
+        f"determinism violated: {a.digest()[:16]} != {b.digest()[:16]}"
+    )
+    print(f"# concurrent determinism digest: {a.digest()[:16]} OK")
+
+    p99s = []
+    for rate in rates_rps:
+        t0 = time.perf_counter()
+        fleet, result = one_run(rate)
+        wall = time.perf_counter() - t0
+        p50, p99 = result.percentile(50.0), result.percentile(99.0)
+        p99s.append(p99)
+        goodput = sum(r.nbytes for r in result.records) * 8e-3 / max(result.span_ms, 1e-9)
+        row(
+            f"backbone_serve/concurrent_{rate}rps",
+            wall * 1e6 / num_requests,
+            f"goodput={goodput:.1f}Mbps;p50={p50:.1f}ms;p99={p99:.1f}ms;"
+            f"dropped={result.dropped};hedges={fleet.hedges_launched()};"
+            f"waste={fleet.hedged_wasted()}",
+        )
+    assert p99s[-1] >= p99s[0], (
+        f"p99 did not grow with offered load: {p99s}"
+    )
+
+
+def run_all():
     run()
+    run_concurrent()
+
+
+if __name__ == "__main__":
+    if "concurrent" in sys.argv[1:]:
+        run_concurrent()
+    else:
+        run_all()

@@ -21,6 +21,14 @@ echo "== benchmark smoke (budget: ${SMOKE_BUDGET_S:-600}s) =="
 BACKBONE_SMOKE=1 timeout "${SMOKE_BUDGET_S:-600}" \
     python -m benchmarks.run backbone_serve read_throughput
 
+echo "== concurrent-workload smoke (budget: ${CONCURRENT_BUDGET_S:-180}s) =="
+# open-loop Poisson zipf storm on the SHARED event engine: asserts the
+# determinism digest (two identical runs -> byte-identical per-request
+# timings + link utilization) and prints open-loop p50/p99 under a rising
+# offered-load ramp, so the bench trajectory captures contention
+BACKBONE_SMOKE=1 timeout "${CONCURRENT_BUDGET_S:-180}" \
+    python -m benchmarks.backbone_serve concurrent
+
 echo "== streaming smoke: video through BlobReader (budget: ${VIDEO_BUDGET_S:-120}s) =="
 # exercises the session API end to end: open/stream receipts, pay-on-delivery,
 # settlement conservation, and the 40 Mbps 4K bar under failures

@@ -41,6 +41,21 @@ class ShelbyConfig:
     storage_fee_per_gb_month: float = 0.023  # W, benchmarked against S3
     epochs_per_month: float = 30.0
     decode_matmul: str = "auto"  # auto | numpy | pallas (see resolve_decode_matmul)
+    # hot-cache policy per RPC node (LRU always; these add expiry/admission)
+    rpc_cache_ttl_ms: float | None = None  # sim-clock TTL for decoded entries
+    rpc_cache_admit_bytes: int | None = None  # skip caching decodes larger than this
+    # event-engine service/network model
+    sp_service_slots: int = 4  # concurrent disk reads per SP (FIFO queue beyond)
+    # per-node NIC line rate wherever a Backbone is built from this config
+    # (the concurrent serving bench); None = unlimited nodes
+    nic_gbps: float | None = 10.0
+
+    def nic(self):
+        from repro.net.backbone import NICSpec
+
+        if self.nic_gbps is None:
+            return None
+        return NICSpec(egress_gbps=self.nic_gbps, ingress_gbps=self.nic_gbps)
 
     def resolve_decode_matmul(self):
         return resolve_decode_matmul(self.decode_matmul)

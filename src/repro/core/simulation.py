@@ -24,7 +24,7 @@ from repro.core.placement import SPInfo
 from repro.net.fleet import CacheAffinityPolicy, RPCFleet
 from repro.net.workloads import zipf_hotset
 from repro.storage.blob import BlobLayout
-from repro.storage.rpc import ReadError, RPCNode
+from repro.storage.rpc import RPCNode
 from repro.storage.sdk import ShelbyClient
 from repro.storage.sp import SPBehavior, StorageProvider
 
@@ -125,22 +125,20 @@ def run_sim(
             sp.scoreboard.bits.clear()
 
         if read_requests_per_epoch:
-            # paid Zipf read traffic through the client session: the client
-            # pays serving RPC nodes on delivery ("reads are paid"); a
-            # dropped request debits nothing
+            # paid Zipf read traffic through the client session, replayed as
+            # a CONCURRENT open-loop Poisson process on the shared event
+            # heap: in-flight requests' hedge timers and SP disk queues
+            # interleave.  The client pays serving RPC nodes on delivery
+            # ("reads are paid"); a dropped request debits nothing.
             metas = list(contract.blobs.values())
             reqs = zipf_hotset(
                 metas,
                 clients=["user"],
                 num_requests=read_requests_per_epoch,
                 seed=seed * 1009 + epoch,
+                arrival="poisson",
             )
-            for req in reqs:
-                try:
-                    client.read(req.blob_id, req.offset, req.length,
-                                client=req.client, t_ms=req.t_ms)
-                except ReadError:
-                    pass  # unrecoverable under current failures: dropped request
+            client.replay(reqs)
 
     # settle the read session: client->RPC channels broadcast their freshest
     # refunds and the RPC->SP channels cascade, so serving income reaches SP

@@ -25,7 +25,7 @@ from repro.storage.checkpoint import CheckpointManager
 from repro.storage.repair import RepairCoordinator
 from repro.storage.rpc import RPCNode
 from repro.storage.sdk import ShelbyClient
-from repro.storage.sp import StorageProvider
+from repro.storage.sp import ServiceSpec, StorageProvider
 from repro.train.loop import Trainer
 
 
@@ -41,11 +41,15 @@ def build_cluster(num_sps: int = 8, layout: BlobLayout | None = None,
     sps = {}
     for i in range(num_sps):
         contract.register_sp(SPInfo(sp_id=i, stake=1000.0, dc=f"dc{i % 3}", rack=f"r{i % 4}"))
-        sps[i] = StorageProvider(i)
+        sps[i] = StorageProvider(
+            i, service=ServiceSpec(slots=CONFIG.sp_service_slots)
+        )
     matmul = resolve_decode_matmul(CONFIG.decode_matmul)
     rpcs = [
         RPCNode(f"rpc{r}", contract, sps, layout, cache_chunksets=32,
-                decode_matmul=matmul)
+                decode_matmul=matmul,
+                cache_ttl_ms=CONFIG.rpc_cache_ttl_ms,
+                cache_admit_bytes=CONFIG.rpc_cache_admit_bytes)
         for r in range(num_rpcs)
     ]
     fleet = RPCFleet(rpcs, CacheAffinityPolicy())

@@ -5,16 +5,30 @@ nodes".  This package models that data plane deterministically so serving
 claims (hedging wins under stragglers, p99 latency, goodput at scale) are
 *measured* on a simulated clock, never inferred from wall-clock noise:
 
-* ``backbone``  — datacenter topology, per-link latency/bandwidth, FIFO
-  transfer accounting on a simulated clock.
+* ``events``    — the shared deterministic event engine (one global heap;
+  generator tasks yielding Sleep/Transfer/Acquire/Join/Recv effects).
+* ``backbone``  — datacenter topology, per-link latency/bandwidth and
+  per-node NIC FIFO transfer accounting on a simulated clock.
 * ``scheduler`` — deadline-based hedged chunk scheduler (replaces the
-  fixed k+hedge loop that used to live in ``storage/rpc.py``).
+  fixed k+hedge loop that used to live in ``storage/rpc.py``), now a
+  task on the shared heap.
 * ``fleet``     — multi-RPC router with pluggable policies (latency-aware,
   cache-affinity rendezvous hashing, power-of-two-choices).
 * ``workloads`` — deterministic scenario generators (video streaming,
-  training epochs, analytics scans, Zipf hot-object traffic).
+  training epochs, analytics scans, Zipf hot-object traffic) plus the
+  open-loop / closed-loop replay drivers.
 """
-from repro.net.backbone import Backbone, LinkSpec
+from repro.net.backbone import Backbone, LinkSpec, NICSpec
+from repro.net.events import (
+    Acquire,
+    Channel,
+    EventLoop,
+    Join,
+    Recv,
+    Release,
+    Sleep,
+    Transfer,
+)
 from repro.net.fleet import (
     CacheAffinityPolicy,
     LatencyAwarePolicy,
@@ -24,7 +38,11 @@ from repro.net.fleet import (
 from repro.net.scheduler import FetchResult, HedgedScheduler
 from repro.net.workloads import (
     ReadRequest,
+    ReplayResult,
+    RequestRecord,
     analytics_scan,
+    replay_closed_loop,
+    replay_open_loop,
     training_epoch,
     video_streaming,
     zipf_hotset,
@@ -33,6 +51,15 @@ from repro.net.workloads import (
 __all__ = [
     "Backbone",
     "LinkSpec",
+    "NICSpec",
+    "EventLoop",
+    "Channel",
+    "Sleep",
+    "Transfer",
+    "Acquire",
+    "Release",
+    "Join",
+    "Recv",
     "HedgedScheduler",
     "FetchResult",
     "RPCFleet",
@@ -40,6 +67,10 @@ __all__ = [
     "CacheAffinityPolicy",
     "PowerOfTwoPolicy",
     "ReadRequest",
+    "RequestRecord",
+    "ReplayResult",
+    "replay_open_loop",
+    "replay_closed_loop",
     "video_streaming",
     "training_epoch",
     "analytics_scan",

@@ -1,0 +1,316 @@
+"""Deterministic shared discrete-event engine for the whole data plane.
+
+Before this module existed, every ``HedgedScheduler.fetch`` ran a *private*
+event heap to completion before the next request started: hedge timers and
+failure recoveries of concurrent requests could never interleave, and only
+trunk reservations coupled requests.  The :class:`EventLoop` here is the
+single global heap the entire read path now runs on — concurrent requests'
+issue/deadline/recovery events genuinely interleave, SPs queue, NICs
+serialize — while staying exactly reproducible: events are ordered by
+``(time, insertion seq)`` with a monotone sequence counter, so two runs of
+the same workload pop the same events in the same order.
+
+Tasks are plain Python generators that yield *effects*:
+
+* ``Sleep(ms)``                 — resume after ``ms`` simulated milliseconds;
+* ``Transfer(src, dst, nbytes)`` — move bytes across the loop's attached
+  :class:`~repro.net.backbone.Backbone` (NIC + trunk serialization and
+  propagation accounted); resumes at the arrival time;
+* ``Acquire(resource, capacity)`` / ``Release(resource)`` — counting
+  semaphore with a FIFO wait queue (SP disk slots, any shared resource);
+* ``Join(handle)``              — wait for a task spawned with
+  :meth:`EventLoop.spawn`; resumes with its return value, or re-raises
+  its exception;
+* ``Recv(channel)``             — wait for a message on a
+  :class:`Channel` (how a hedged fetch hears from its in-flight legs
+  *and* its deadline timer through one ordered stream).
+
+Sync callers keep working: wrap a task in a fresh loop and
+``run_until`` it (see ``RPCNode.read_items_detailed``).  Concurrent
+drivers (``repro.net.workloads.replay_open_loop`` /
+``replay_closed_loop``) spawn one task per request on a shared loop and
+``run()`` everything to completion.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from collections import deque
+from typing import Any, Generator
+
+
+# -- effects (what a task may yield) ----------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Sleep:
+    """Resume this task after ``ms`` simulated milliseconds."""
+
+    ms: float
+
+
+@dataclasses.dataclass(frozen=True)
+class Transfer:
+    """Move ``nbytes`` src -> dst over the loop's attached network."""
+
+    src: str
+    dst: str
+    nbytes: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Acquire:
+    """Take one slot of a shared resource; queues FIFO when saturated.
+
+    ``capacity`` sizes the resource the first time its key is seen;
+    later acquires of the same key ignore it.
+    """
+
+    resource: Any  # hashable key, e.g. ("sp", 3)
+    capacity: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class Release:
+    """Give back one slot; wakes the oldest waiter at the current time."""
+
+    resource: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Join:
+    """Wait for another task; resumes with its result or raises its error."""
+
+    handle: "TaskHandle"
+
+
+@dataclasses.dataclass(frozen=True)
+class Recv:
+    """Wait for (or immediately take) the next message on a channel."""
+
+    channel: "Channel"
+
+
+class TaskHandle:
+    """One spawned task: its generator, lifecycle state, and joiners."""
+
+    __slots__ = (
+        "gen", "label", "done", "result", "error", "error_delivered",
+        "cancelled", "started_ms", "finished_ms", "_joiners",
+    )
+
+    def __init__(self, gen: Generator, label: str, started_ms: float):
+        self.gen = gen
+        self.label = label
+        self.done = False
+        self.result: Any = None
+        self.error: BaseException | None = None
+        self.error_delivered = False
+        self.cancelled = False
+        self.started_ms = started_ms
+        self.finished_ms = float("nan")
+        self._joiners: list["TaskHandle"] = []
+
+    def cancel(self) -> None:
+        """Drop the task: pending wakeups for it are skipped when popped."""
+        self.cancelled = True
+
+    def __repr__(self) -> str:  # debugging aid only
+        state = "done" if self.done else ("cancelled" if self.cancelled else "live")
+        return f"<Task {self.label} {state}>"
+
+
+class Resource:
+    """Counting semaphore with a FIFO wait queue and queueing telemetry."""
+
+    __slots__ = ("key", "capacity", "in_use", "waiters", "acquired",
+                 "wait_ms_total", "max_queue")
+
+    def __init__(self, key: Any, capacity: int):
+        if capacity < 1:
+            raise ValueError(f"resource {key!r} needs capacity >= 1")
+        self.key = key
+        self.capacity = capacity
+        self.in_use = 0
+        self.waiters: deque[tuple[TaskHandle, float]] = deque()
+        self.acquired = 0
+        self.wait_ms_total = 0.0
+        self.max_queue = 0
+
+
+class Channel:
+    """Unbounded FIFO message queue; one waiter resumed per send."""
+
+    def __init__(self, loop: "EventLoop"):
+        self._loop = loop
+        self._queue: deque[Any] = deque()
+        self._waiters: deque[TaskHandle] = deque()
+
+    def send(self, value: Any) -> None:
+        """Deliver a message at the loop's current time (callable from any
+        task's step — the oldest live waiter is scheduled, FIFO)."""
+        while self._waiters:
+            h = self._waiters.popleft()
+            if h.cancelled or h.done:
+                continue
+            self._loop._push(self._loop.now, h, ("resume", value))
+            return
+        self._queue.append(value)
+
+
+class EventLoop:
+    """The shared heap.  ``network`` (a Backbone) interprets ``Transfer``."""
+
+    def __init__(self, network=None, *, trace: bool = False):
+        self.now = 0.0
+        self.network = network
+        self._heap: list[tuple[float, int, TaskHandle, tuple[str, Any]]] = []
+        self._seq = itertools.count()
+        self._resources: dict[Any, Resource] = {}
+        self._tasks: list[TaskHandle] = []
+        self._failures: list[TaskHandle] = []
+        # optional (t_ms, task label, step kind) record — the audit trail the
+        # interleaving tests assert on
+        self.trace: list[tuple[float, str, str]] | None = [] if trace else None
+
+    # -- resources -----------------------------------------------------------------
+    def resource(self, key: Any, capacity: int = 1) -> Resource:
+        res = self._resources.get(key)
+        if res is None:
+            res = self._resources[key] = Resource(key, capacity)
+        return res
+
+    # -- task lifecycle ------------------------------------------------------------
+    def spawn(self, gen: Generator, at_ms: float | None = None,
+              label: str | None = None) -> TaskHandle:
+        """Schedule a generator task; it first steps at ``at_ms`` (default:
+        the current time).  Returns a handle usable with ``Join``."""
+        t = self.now if at_ms is None else at_ms
+        h = TaskHandle(gen, label or f"task{len(self._tasks)}", t)
+        self._tasks.append(h)
+        self._push(t, h, ("resume", None))
+        return h
+
+    def _push(self, t_ms: float, handle: TaskHandle, action: tuple[str, Any]) -> None:
+        heapq.heappush(self._heap, (t_ms, next(self._seq), handle, action))
+
+    def _finish(self, h: TaskHandle, *, result: Any = None,
+                error: BaseException | None = None) -> None:
+        h.done = True
+        h.result = result
+        h.error = error
+        h.finished_ms = self.now
+        for j in h._joiners:
+            if error is not None:
+                h.error_delivered = True
+                self._push(self.now, j, ("throw", error))
+            else:
+                self._push(self.now, j, ("resume", result))
+        h._joiners.clear()
+        if error is not None and not h.error_delivered:
+            self._failures.append(h)
+
+    def _step(self) -> None:
+        t, _, h, (kind, value) = heapq.heappop(self._heap)
+        self.now = t
+        if h.cancelled or h.done:
+            return
+        if self.trace is not None:
+            self.trace.append((t, h.label, kind))
+        try:
+            effect = h.gen.throw(value) if kind == "throw" else h.gen.send(value)
+        except StopIteration as stop:
+            self._finish(h, result=stop.value)
+            return
+        except Exception as err:
+            self._finish(h, error=err)
+            return
+        self._dispatch(h, effect)
+
+    def _dispatch(self, h: TaskHandle, effect: Any) -> None:
+        if isinstance(effect, Sleep):
+            self._push(self.now + max(0.0, effect.ms), h, ("resume", None))
+        elif isinstance(effect, Transfer):
+            if self.network is None:
+                self._finish(h, error=RuntimeError(
+                    f"task {h.label} yielded Transfer but the loop has no network"))
+                return
+            arrival = self.network.transfer(effect.src, effect.dst,
+                                            effect.nbytes, self.now)
+            self._push(arrival, h, ("resume", arrival))
+        elif isinstance(effect, Acquire):
+            res = self.resource(effect.resource, effect.capacity)
+            if res.in_use < res.capacity:
+                res.in_use += 1
+                res.acquired += 1
+                self._push(self.now, h, ("resume", None))
+            else:
+                res.waiters.append((h, self.now))
+                res.max_queue = max(res.max_queue, len(res.waiters))
+        elif isinstance(effect, Release):
+            res = self.resource(effect.resource)
+            res.in_use -= 1
+            while res.waiters:
+                w, t0 = res.waiters.popleft()
+                if w.cancelled or w.done:
+                    continue
+                res.in_use += 1
+                res.acquired += 1
+                res.wait_ms_total += self.now - t0
+                self._push(self.now, w, ("resume", None))
+                break
+            self._push(self.now, h, ("resume", None))
+        elif isinstance(effect, Join):
+            child = effect.handle
+            if child.done:
+                if child.error is not None:
+                    child.error_delivered = True
+                    self._push(self.now, h, ("throw", child.error))
+                else:
+                    self._push(self.now, h, ("resume", child.result))
+            else:
+                child._joiners.append(h)
+        elif isinstance(effect, Recv):
+            ch = effect.channel
+            if ch._queue:
+                self._push(self.now, h, ("resume", ch._queue.popleft()))
+            else:
+                ch._waiters.append(h)
+        else:
+            self._finish(h, error=TypeError(
+                f"task {h.label} yielded unknown effect {effect!r}"))
+
+    # -- drivers -------------------------------------------------------------------
+    def run(self) -> float:
+        """Drain every event; returns the final simulated time.
+
+        Raises the first exception of any task whose error was never
+        delivered to a joiner, and flags deadlocks (tasks left suspended on
+        a Join/Recv/Acquire that can never fire)."""
+        while self._heap:
+            self._step()
+        for h in self._failures:
+            if not h.error_delivered:
+                raise h.error
+        stuck = [h for h in self._tasks if not h.done and not h.cancelled]
+        if stuck:
+            names = ", ".join(s.label for s in stuck[:8])
+            raise RuntimeError(
+                f"event loop drained with {len(stuck)} task(s) still "
+                f"suspended (deadlock?): {names}")
+        return self.now
+
+    def run_until(self, handle: TaskHandle) -> Any:
+        """Process events until ``handle`` completes; returns its result (or
+        raises its error).  Later events — e.g. straggler responses the
+        caller stopped caring about — stay unprocessed, exactly like a real
+        client abandoning in-flight RPCs."""
+        while not handle.done and self._heap:
+            self._step()
+        if not handle.done:
+            raise RuntimeError(
+                f"task {handle.label} never completed: event heap drained "
+                f"while it was still suspended")
+        if handle.error is not None:
+            handle.error_delivered = True
+            raise handle.error
+        return handle.result

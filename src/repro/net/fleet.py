@@ -27,6 +27,7 @@ from typing import TYPE_CHECKING
 import numpy as np
 
 from repro.net.backbone import Backbone
+from repro.net.events import EventLoop, Join, Sleep
 
 if TYPE_CHECKING:  # avoid a cycle: storage.rpc imports repro.net.scheduler
     from repro.storage.rpc import RPCNode
@@ -119,6 +120,13 @@ class RPCFleet:
         """The node that fronts write dispersal (any node can; pick node 0)."""
         return self.rpcs[0]
 
+    @property
+    def network(self) -> Backbone | None:
+        """The Backbone event-loop Transfers route over: the fleet's own, or
+        — for a bare RPCNode wrapped into a fleet of one — the primary
+        transport's."""
+        return self.backbone or getattr(self.primary.transport, "backbone", None)
+
     def node(self, rpc_id: str) -> RPCNode:
         return self.rpcs[self.node_ids.index(rpc_id)]
 
@@ -140,24 +148,26 @@ class RPCFleet:
             return 0.0
         return self.backbone.propagation_ms(client, self.node_ids[i])
 
-    def serve_ranges(
+    def serve_ranges_task(
         self,
+        loop: EventLoop,
         ranges: list[tuple[int, int, int]],  # (blob_id, offset, length)
-        *,
         client: str | None = None,
-        t_ms: float = 0.0,
-    ) -> list[ServedRange]:
-        """Serve many byte ranges — possibly of different blobs — in ONE
-        fleet pass.
+        label: str = "serve",
+    ):
+        """Task: serve many byte ranges — possibly of different blobs — in
+        ONE fleet pass on the shared event loop.
 
-        `t_ms` is the batch's arrival time on the global simulated clock;
-        concurrent requests queue against each other on backbone trunks.
-        Every (blob, chunkset) across ALL ranges is routed individually
-        (deduplicated — two ranges sharing a chunkset fetch it once), then
-        each node reads its entire share in one `read_items_detailed` call,
-        so wide GF batch-decodes span requests.  Chunkset legs overlap
-        (hedged fetches are independent): a range's latency is the max over
-        its own chunksets' legs plus the client<->node round trip.
+        Every (blob, chunkset) across ALL ranges is routed individually at
+        the task's start time (deduplicated — two ranges sharing a chunkset
+        fetch it once), then each node reads its entire share as ONE
+        spawned `read_items_task`, so wide GF batch-decodes span requests
+        and all node legs run concurrently on the shared heap — contending
+        with every other in-flight request's legs for trunks, NICs and SP
+        disk slots.  Client<->node legs are pure propagation (clients reach
+        the fleet over the public internet, not the dedicated backbone): a
+        range's latency is the max over its own chunksets' legs plus the
+        client<->node round trip.
         """
         lay = self.primary.layout
         contract = self.primary.contract
@@ -177,13 +187,35 @@ class RPCFleet:
         decoded: dict[tuple[int, int], np.ndarray] = {}
         item_stats: dict[tuple[int, int], object] = {}
         prop_of: dict[int, float] = {}
-        for i, items in by_node.items():
+        handles: dict[int, object] = {}
+        for i, node_items in by_node.items():
             prop = self._prop(i, client)
             prop_of[i] = prop
-            out, stats = self.rpcs[i].read_items_detailed(items, t_ms + prop)
+
+            def node_task(i=i, node_items=node_items, prop=prop):
+                if prop > 0:
+                    yield Sleep(prop)  # request reaches the serving node
+                result = yield from self.rpcs[i].read_items_task(
+                    loop, node_items, label=f"{label}/{self.node_ids[i]}"
+                )
+                return result
+
+            handles[i] = loop.spawn(
+                node_task(), label=f"{label}/{self.node_ids[i]}"
+            )
+        first_err: Exception | None = None
+        for i, h in handles.items():
+            try:
+                out, stats = yield Join(h)
+            except Exception as e:  # harvest every node leg before raising
+                if first_err is None:
+                    first_err = e
+                continue
             self._observe(i, max(s.latency_ms for s in stats.values()))
             decoded.update(out)
             item_stats.update(stats)
+        if first_err is not None:
+            raise first_err
 
         served: list[ServedRange] = []
         for (blob_id, offset, length), items in zip(ranges, per_range_items):
@@ -214,6 +246,27 @@ class RPCFleet:
             self.bytes_served += len(data)
             self.request_latencies_ms.append(latency)
         return served
+
+    def serve_ranges(
+        self,
+        ranges: list[tuple[int, int, int]],  # (blob_id, offset, length)
+        *,
+        client: str | None = None,
+        t_ms: float = 0.0,
+    ) -> list[ServedRange]:
+        """Synchronous wrapper over :meth:`serve_ranges_task`.
+
+        `t_ms` anchors the batch on the global simulated clock; trunk/NIC
+        reservations persist in the shared Backbone, so sequential callers
+        still queue against earlier traffic.  For genuinely concurrent
+        requests, spawn `serve_ranges_task` per request on one shared loop
+        (see ``repro.net.workloads.replay_open_loop``)."""
+        loop = EventLoop(network=self.network)
+        h = loop.spawn(
+            self.serve_ranges_task(loop, ranges, client=client),
+            at_ms=t_ms, label="serve",
+        )
+        return loop.run_until(h)
 
     def read_range(
         self, blob_id: int, offset: int, length: int, *, client: str | None = None,

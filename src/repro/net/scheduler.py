@@ -11,17 +11,25 @@ Replaces the fixed ``k + hedge`` loop that used to live in
    ``hedge`` extra requests and re-arm (straggler mitigation — the paper's
    "ignore stragglers" behaviour, with the waste made measurable).
 
-The scheduler never peeks at a request's completion time before the
-simulated clock reaches it, so its decisions are exactly the ones a real
-RPC node could make — and everything is deterministic.
+The scheduler is a *task* on a shared :class:`~repro.net.events.EventLoop`:
+every in-flight leg is its own spawned task, and the deadline is a timer
+task feeding the same :class:`~repro.net.events.Channel`, so the hedge
+decisions of concurrent fetches genuinely interleave on one global heap —
+a hot SP another request is queueing on delays THIS fetch's leg, which can
+blow THIS fetch's deadline.  ``fetch()`` keeps the old synchronous shape by
+running ``fetch_task`` on a private loop; it never peeks at a completion
+time before the simulated clock reaches it, and everything is
+deterministic.
 """
 from __future__ import annotations
 
 import dataclasses
-import heapq
-import itertools
 from collections import deque
 from typing import Callable
+
+from repro.net.events import Channel, EventLoop, Recv, Sleep
+
+_HEDGE = object()  # sentinel message the deadline timer posts
 
 
 @dataclasses.dataclass
@@ -43,11 +51,11 @@ class FetchResult:
 
 
 class HedgedScheduler:
-    """Issues requests through a transport-shaped callback.
+    """Issues requests through transport-shaped task factories.
 
-    fetch() drives ``issue(key, sp_id, t_ms) -> (payload | None, done_ms)``
-    — the transport must answer with the payload (or None for a failure)
-    and the simulated completion time — plus an optional
+    ``fetch_task`` drives ``issue_task(key, sp_id)`` — a generator yielding
+    event-loop effects (``Transfer``/``Acquire``/``Sleep``) and returning
+    the payload, or ``None`` for a transport failure — plus an optional
     ``verify(key, payload) -> bool`` commitment check.
     """
 
@@ -62,6 +70,84 @@ class HedgedScheduler:
         self.deadline_factor = deadline_factor
         self.min_deadline_ms = min_deadline_ms
 
+    def fetch_task(
+        self,
+        loop: EventLoop,
+        k: int,
+        candidates: list[tuple[int, int, float]],  # (key, sp_id, est_ms)
+        issue_task: Callable,  # (key, sp_id) -> generator returning payload|None
+        verify: Callable[[int, object], bool] | None = None,
+        label: str = "fetch",
+    ):
+        """Generator task; spawn it on the shared loop (its legs and hedge
+        timer live on the same heap as every other request's)."""
+        if len(candidates) < k:
+            raise ValueError(f"need >= {k} candidates, got {len(candidates)}")
+        order = sorted(candidates, key=lambda c: (c[2], c[0]))
+        queue = deque(order)
+        res = FetchResult(shards={}, latency_ms=0.0)
+        start_ms = loop.now
+        chan = Channel(loop)
+        outstanding = 0
+
+        def leg(key, sp_id):
+            payload = yield from issue_task(key, sp_id)
+            chan.send((key, payload))
+
+        def launch():
+            nonlocal outstanding
+            key, sp_id, _est = queue.popleft()
+            res.issued += 1
+            outstanding += 1
+            loop.spawn(leg(key, sp_id), label=f"{label}/leg{key}")
+
+        def timer(delay_ms):
+            yield Sleep(delay_ms)
+            chan.send((_HEDGE, None))
+
+        primaries = order[:k]
+        for _ in range(k):
+            launch()
+        deadline = max(
+            self.min_deadline_ms, self.deadline_factor * primaries[-1][2]
+        )
+        timer_h = loop.spawn(timer(deadline), label=f"{label}/deadline")
+
+        while len(res.shards) < k:
+            if outstanding == 0:
+                if not queue:
+                    break  # exhausted: partial result, caller decides
+                launch()  # defensive recovery; normally unreachable
+                continue
+            key, data = yield Recv(chan)
+            if key is _HEDGE:
+                # stragglers outstanding past the deadline: hedge + re-arm
+                launched = 0
+                while launched < self.hedge and queue:
+                    launch()
+                    launched += 1
+                res.hedges += launched
+                if launched and queue:
+                    timer_h = loop.spawn(timer(deadline), label=f"{label}/deadline")
+                continue
+            outstanding -= 1
+            if data is None:
+                res.failed += 1
+                if queue:
+                    launch()  # instant failure recovery
+                continue
+            if verify is not None and not verify(key, data):
+                res.bad += 1
+                if queue:
+                    launch()
+                continue
+            res.shards[key] = data
+            res.used += 1
+        if timer_h is not None and not timer_h.done:
+            timer_h.cancel()
+        res.latency_ms = loop.now - start_ms
+        return res
+
     def fetch(
         self,
         k: int,
@@ -70,57 +156,23 @@ class HedgedScheduler:
         verify: Callable[[int, object], bool] | None = None,
         start_ms: float = 0.0,
     ) -> FetchResult:
-        """`start_ms` anchors the fetch on the global simulated clock so
-        transfers from concurrent requests queue against each other."""
-        if len(candidates) < k:
-            raise ValueError(f"need >= {k} candidates, got {len(candidates)}")
-        order = sorted(candidates, key=lambda c: (c[2], c[0]))
-        queue = deque(order)
-        events: list[tuple[float, int, str, object]] = []
-        seq = itertools.count()
-        res = FetchResult(shards={}, latency_ms=0.0)
+        """Synchronous wrapper: run ``fetch_task`` on a private loop.
 
-        def launch(t_ms: float) -> None:
-            key, sp_id, _est = queue.popleft()
-            payload, done_ms = issue(key, sp_id, t_ms)
-            res.issued += 1
-            heapq.heappush(events, (done_ms, next(seq), "done", (key, payload)))
+        ``issue(key, sp_id, t_ms) -> (payload | None, done_ms)`` answers
+        with the payload and the simulated completion time (the legacy
+        transport shape); ``start_ms`` anchors the fetch on the caller's
+        simulated clock.
+        """
+        loop = EventLoop()
 
-        primaries = order[:k]
-        for _ in range(k):
-            launch(start_ms)
-        deadline = max(
-            self.min_deadline_ms, self.deadline_factor * primaries[-1][2]
+        def issue_task(key, sp_id):
+            payload, done_ms = issue(key, sp_id, loop.now)
+            if done_ms > loop.now:
+                yield Sleep(done_ms - loop.now)
+            return payload
+
+        h = loop.spawn(
+            self.fetch_task(loop, k, candidates, issue_task, verify),
+            at_ms=start_ms, label="fetch",
         )
-        heapq.heappush(events, (start_ms + deadline, next(seq), "hedge", None))
-
-        now = start_ms
-        while events and len(res.shards) < k:
-            now, _, kind, payload = heapq.heappop(events)
-            if kind == "hedge":
-                # stragglers outstanding past the deadline: hedge + re-arm
-                launched = 0
-                while launched < self.hedge and queue:
-                    launch(now)
-                    launched += 1
-                res.hedges += launched
-                if launched and queue:
-                    heapq.heappush(
-                        events, (now + deadline, next(seq), "hedge", None)
-                    )
-                continue
-            key, data = payload
-            if data is None:
-                res.failed += 1
-                if queue:
-                    launch(now)  # instant failure recovery
-                continue
-            if verify is not None and not verify(key, data):
-                res.bad += 1
-                if queue:
-                    launch(now)
-                continue
-            res.shards[key] = data
-            res.used += 1
-        res.latency_ms = now - start_ms
-        return res
+        return loop.run_until(h)

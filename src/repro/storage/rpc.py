@@ -10,8 +10,15 @@ requests, hedge extras when stragglers blow the deadline, ignore the rest),
 verify every chunk against its on-chain Merkle root (altered data is
 detected, §2.3), Clay-decode, and assemble.  Chunk requests travel through
 a pluggable :class:`Transport` — direct in-process calls, or the simulated
-dedicated backbone of ``repro.net.backbone`` with per-link latency and
-bandwidth accounting on a simulated clock.  Reads spanning several
+dedicated backbone of ``repro.net.backbone`` with per-link latency,
+per-node NIC and bandwidth accounting on a simulated clock.  The whole
+read path runs as generator *tasks* on a shared
+:class:`~repro.net.events.EventLoop`: every chunk request is its own task
+(request transfer -> SP disk-slot queue -> service -> response transfer),
+so concurrent requests' hedge timers, failure recoveries and SP queues
+interleave on one global heap.  The synchronous entry points
+(``read_items_detailed`` and friends) spin up a private loop per call and
+stay exactly as before for sequential callers.  Reads spanning several
 chunksets — even of *different blobs*, via ``read_items_detailed`` — take
 the **batched decode path**: chunksets with the same erasure pattern are
 Clay-decoded in one wide GF call (``ClayCode.decode_batch``, optionally
@@ -35,6 +42,7 @@ import numpy as np
 from repro.core import commitments as cm
 from repro.core.contract import BlobState, ShelbyContract
 from repro.core.payments import PaymentLedger
+from repro.net.events import Acquire, EventLoop, Join, Release, Sleep, Transfer
 from repro.net.scheduler import FetchResult, HedgedScheduler
 from repro.storage.blob import BlobLayout
 from repro.storage.sp import StorageProvider
@@ -70,30 +78,45 @@ class ItemStats:
 
 # -- transports: how chunk requests reach SPs -------------------------------------
 class DirectTransport:
-    """In-process calls; completion time is just the SP's service latency."""
+    """In-process calls; completion time is the SP's queued service time.
+
+    ``request_task`` is the event-engine path: acquire one of the SP's
+    disk slots (FIFO queue when the SP is hot), hold it for the service
+    time, return the chunk.  No network stages.
+    """
+
+    backbone = None  # no simulated network attached
 
     def __init__(self, sps: dict[int, StorageProvider]):
         self.sps = sps
 
     def estimate_ms(self, sp_id: int, nbytes: int) -> float:
-        return self.sps[sp_id].behavior.latency_ms
+        return self.sps[sp_id].service_ms()
 
-    def request(
-        self, sp_id: int, blob_id: int, chunkset: int, chunk: int, t_ms: float,
-    ) -> tuple[np.ndarray | None, float]:
+    def request_task(self, sp_id: int, blob_id: int, chunkset: int, chunk: int):
         sp = self.sps[sp_id]
         resp = sp.serve_chunk(blob_id, chunkset, chunk)
-        done = t_ms + sp.behavior.latency_ms
-        return (None, done) if resp is None else (resp[0], done)
+        if resp is None:
+            # crashed / missing: a failed probe costs one service interval
+            # but never occupies a disk slot
+            yield Sleep(sp.service_ms())
+            return None
+        data, service_ms = resp
+        yield Acquire(("sp", sp_id), sp.service.slots)
+        yield Sleep(service_ms)
+        yield Release(("sp", sp_id))
+        return data
 
 
 class BackboneTransport:
     """Chunk requests over the simulated dedicated backbone (§2.3).
 
-    request -> (trunk transfer) -> SP service -> (trunk transfer back);
+    request transfer -> SP disk-slot queue -> service -> response transfer;
     failures (crashed SP / missing chunk) surface as a fast NACK after one
     round trip.  All times are simulated milliseconds, with FIFO
-    serialization accounted per trunk by the Backbone.
+    serialization accounted per trunk *and* per node NIC by the Backbone,
+    and per-SP concurrency accounted by the shared event loop's disk-slot
+    resources.
     """
 
     REQUEST_BYTES = 256
@@ -110,22 +133,24 @@ class BackboneTransport:
         bb, sp = self.backbone, self.sp_node[sp_id]
         return (
             bb.estimate_ms(self.rpc_node, sp, self.REQUEST_BYTES)
-            + self.sps[sp_id].behavior.latency_ms
+            + self.sps[sp_id].service_ms()
             + bb.estimate_ms(sp, self.rpc_node, nbytes)
         )
 
-    def request(
-        self, sp_id: int, blob_id: int, chunkset: int, chunk: int, t_ms: float,
-    ) -> tuple[np.ndarray | None, float]:
-        bb, node = self.backbone, self.sp_node[sp_id]
-        arrived = bb.transfer(self.rpc_node, node, self.REQUEST_BYTES, t_ms)
+    def request_task(self, sp_id: int, blob_id: int, chunkset: int, chunk: int):
+        node = self.sp_node[sp_id]
+        yield Transfer(self.rpc_node, node, self.REQUEST_BYTES)
         sp = self.sps[sp_id]
         resp = sp.serve_chunk(blob_id, chunkset, chunk)
         if resp is None:
-            return None, bb.transfer(node, self.rpc_node, self.NACK_BYTES, arrived)
+            yield Transfer(node, self.rpc_node, self.NACK_BYTES)
+            return None
         data, service_ms = resp
-        done = bb.transfer(node, self.rpc_node, data.nbytes, arrived + service_ms)
-        return data, done
+        yield Acquire(("sp", sp_id), sp.service.slots)
+        yield Sleep(service_ms)
+        yield Release(("sp", sp_id))
+        yield Transfer(node, self.rpc_node, data.nbytes)
+        return data
 
 
 class RPCNode:
@@ -143,6 +168,8 @@ class RPCNode:
         scheduler: HedgedScheduler | None = None,
         batch_decode: bool = True,
         decode_matmul=None,
+        cache_ttl_ms: float | None = None,
+        cache_admit_bytes: int | None = None,
     ):
         self.rpc_id = rpc_id
         self.contract = contract
@@ -159,8 +186,11 @@ class RPCNode:
         for sp_id in sps:
             self.ledger.open(str(sp_id), sp_deposit)  # channels at join time (§2.3)
         self.serving_income = 0.0  # realized when client sessions settle (§3.2)
-        self._cache: OrderedDict[tuple[int, int], np.ndarray] = OrderedDict()
+        # hot-cache: key -> (decoded chunkset, expiry on the sim clock or None)
+        self._cache: OrderedDict[tuple[int, int], tuple[np.ndarray, float | None]] = OrderedDict()
         self._cache_size = cache_chunksets
+        self.cache_ttl_ms = cache_ttl_ms
+        self.cache_admit_bytes = cache_admit_bytes
         self.stats = ReadStats()
         contract.register_rpc(rpc_id)
 
@@ -207,10 +237,10 @@ class RPCNode:
             self.ledger.open(str(sp_id), self._sp_deposit)  # fresh channel
         return income
 
-    def _fetch_chunkset(
-        self, blob_id: int, chunkset: int, start_ms: float = 0.0
-    ) -> FetchResult:
-        """Hedged k-of-n shard fetch through the transport; no decode."""
+    def _fetch_chunkset_task(
+        self, loop: EventLoop, blob_id: int, chunkset: int, label: str = "fetch"
+    ):
+        """Hedged k-of-n shard fetch as a task on the shared loop; no decode."""
         meta = self.contract.blobs[blob_id]
         if meta.state is not BlobState.READY:
             raise ReadError(f"blob {blob_id} not ready")
@@ -224,9 +254,10 @@ class RPCNode:
             for ck in range(lay.n)
         ]
 
-        def issue(ck: int, sp_id: int, t_ms: float):
+        def issue_task(ck: int, sp_id: int):
             self.stats.chunks_requested += 1
-            return self.transport.request(sp_id, blob_id, chunkset, ck, t_ms)
+            data = yield from self.transport.request_task(sp_id, blob_id, chunkset, ck)
+            return data
 
         def verify(ck: int, data) -> bool:
             commit, _ = cm.commit_chunk(data)
@@ -236,7 +267,9 @@ class RPCNode:
             self._pay(meta.placement[(chunkset, ck)])  # pay on delivery
             return True
 
-        result = self.scheduler.fetch(lay.k, candidates, issue, verify, start_ms=start_ms)
+        result = yield from self.scheduler.fetch_task(
+            loop, lay.k, candidates, issue_task, verify, label=label
+        )
         if len(result.shards) < lay.k:
             raise ReadError(
                 f"chunkset ({blob_id},{chunkset}): only {len(result.shards)}/{lay.k} valid chunks"
@@ -248,8 +281,26 @@ class RPCNode:
         self.stats.fetch_ms_total += result.latency_ms
         return result
 
-    def _cache_put(self, key: tuple[int, int], decoded: np.ndarray) -> None:
-        self._cache[key] = decoded
+    def _cache_get(self, key: tuple[int, int], now_ms: float) -> np.ndarray | None:
+        entry = self._cache.get(key)
+        if entry is None:
+            return None
+        decoded, expires = entry
+        if expires is not None and now_ms >= expires:
+            del self._cache[key]  # TTL lapsed on the sim clock
+            return None
+        self._cache.move_to_end(key)
+        return decoded
+
+    def _cache_put(self, key: tuple[int, int], decoded: np.ndarray,
+                   now_ms: float = 0.0) -> None:
+        if self._cache_size <= 0:
+            return
+        if self.cache_admit_bytes is not None and decoded.nbytes > self.cache_admit_bytes:
+            return  # admission: oversized objects would evict the whole hot set
+        expires = None if self.cache_ttl_ms is None else now_ms + self.cache_ttl_ms
+        self._cache[key] = (decoded, expires)
+        self._cache.move_to_end(key)
         if len(self._cache) > self._cache_size:
             self._cache.popitem(last=False)
 
@@ -263,38 +314,59 @@ class RPCNode:
     def read_chunkset(self, blob_id: int, chunkset: int) -> np.ndarray:
         return self.read_chunkset_timed(blob_id, chunkset)[0]
 
-    def read_items_detailed(
-        self, items: list[tuple[int, int]], start_ms: float = 0.0
-    ) -> tuple[dict[tuple[int, int], np.ndarray], dict[tuple[int, int], ItemStats]]:
-        """Read many (blob_id, chunkset) items — possibly spanning blobs.
+    def read_items_task(
+        self, loop: EventLoop, items: list[tuple[int, int]], label: str = "read"
+    ):
+        """Task: read many (blob_id, chunkset) items — possibly spanning
+        blobs — on the shared event loop.
 
-        Cache misses are fetched independently (hedged fetches overlap ->
-        each item's latency is its own slowest leg) and decoded through the
-        batched Clay path when more than one misses: chunksets of
-        *different blobs* with the same erasure pattern still stack into one
-        wide GF matmul, so a `get_many` spanning requests amortizes kernel
-        dispatch across all of them.
+        Cache misses are *spawned* as independent fetch tasks (hedged
+        fetches overlap -> each item's latency is its own slowest leg, and
+        concurrent requests' fetches contend for the same SP disk slots and
+        NICs), then decoded through the batched Clay path when more than
+        one misses: chunksets of *different blobs* with the same erasure
+        pattern still stack into one wide GF matmul, so a `get_many`
+        spanning requests amortizes kernel dispatch across all of them.
         """
         out: dict[tuple[int, int], np.ndarray] = {}
         stats: dict[tuple[int, int], ItemStats] = {}
         fetched: dict[tuple[int, int], FetchResult] = {}
+        pending: list[tuple[tuple[int, int], object]] = []
+        seen: set[tuple[int, int]] = set()
         for key in items:
-            if key in out or key in fetched:
+            if key in seen:
                 continue
-            if key in self._cache:
-                self._cache.move_to_end(key)
+            seen.add(key)
+            cached = self._cache_get(key, loop.now)
+            if cached is not None:
                 self.stats.cache_hits += 1
-                out[key] = self._cache[key]
+                out[key] = cached
                 stats[key] = ItemStats(cache_hit=True, latency_ms=0.0)
             else:
-                res = self._fetch_chunkset(key[0], key[1], start_ms)
-                fetched[key] = res
-                stats[key] = ItemStats(
-                    cache_hit=False,
-                    latency_ms=res.latency_ms,
-                    hedges=res.hedges,
-                    wasted=res.wasted,
+                h = loop.spawn(
+                    self._fetch_chunkset_task(
+                        loop, key[0], key[1], label=f"{label}/cs{key}"
+                    ),
+                    label=f"{label}/cs{key}",
                 )
+                pending.append((key, h))
+        first_err: Exception | None = None
+        for key, h in pending:
+            try:
+                res = yield Join(h)
+            except Exception as e:  # harvest every child before propagating
+                if first_err is None:
+                    first_err = e
+                continue
+            fetched[key] = res
+            stats[key] = ItemStats(
+                cache_hit=False,
+                latency_ms=res.latency_ms,
+                hedges=res.hedges,
+                wasted=res.wasted,
+            )
+        if first_err is not None:
+            raise first_err
         if fetched:
             order = sorted(fetched)
             if self.batch_decode and len(order) > 1:
@@ -308,8 +380,21 @@ class RPCNode:
                 ]
             for key, dec in zip(order, decoded):
                 out[key] = dec
-                self._cache_put(key, dec)
+                self._cache_put(key, dec, loop.now)
         return out, stats
+
+    def read_items_detailed(
+        self, items: list[tuple[int, int]], start_ms: float = 0.0
+    ) -> tuple[dict[tuple[int, int], np.ndarray], dict[tuple[int, int], ItemStats]]:
+        """Synchronous wrapper over :meth:`read_items_task` — runs the read
+        on a private event loop anchored at ``start_ms``.  Trunk/NIC
+        reservations persist in the shared Backbone, so sequential callers
+        still queue against earlier traffic."""
+        loop = EventLoop(network=getattr(self.transport, "backbone", None))
+        h = loop.spawn(
+            self.read_items_task(loop, items), at_ms=start_ms, label="read_items"
+        )
+        return loop.run_until(h)
 
     def read_chunksets_timed(
         self, blob_id: int, chunksets: list[int], start_ms: float = 0.0

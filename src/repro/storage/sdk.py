@@ -72,6 +72,10 @@ class ReadReceipt:
     cache_hits: int = 0
     hedges_launched: int = 0
     hedged_wasted: int = 0
+    # readahead bookkeeping (BlobReader): this read was issued as a
+    # prefetch / this read overlapped N prefetches with its own fetch
+    prefetched: bool = False
+    prefetches_launched: int = 0
 
     @property
     def total_paid(self) -> float:
@@ -142,6 +146,39 @@ class ShelbySession:
         if self.closed:
             raise ChannelError("session settled; open a new one to keep reading")
 
+    def _receipt_for(self, sr, *, prefetched: bool = False,
+                     prefetches_launched: int = 0) -> ReadReceipt:
+        """Pay on delivery for one ServedRange and record its receipt: the
+        bytes are in hand, split the per-byte fee across serving nodes in
+        proportion to chunksets served."""
+        total_cs = sum(sr.chunksets_by_node.values())
+        payments: dict[str, float] = {}
+        for rpc_id, count in sr.chunksets_by_node.items():
+            amount = max(
+                self._price * len(sr.data) * count / total_cs, 1e-12
+            )
+            self._channel(rpc_id).pay(amount)
+            payments[rpc_id] = amount
+        receipt = ReadReceipt(
+            blob_id=sr.blob_id, offset=sr.offset, length=sr.length,
+            data=sr.data, latency_ms=sr.latency_ms, payments=payments,
+            chunksets_by_node=dict(sr.chunksets_by_node),
+            cache_hits=sr.cache_hits, hedges_launched=sr.hedges_launched,
+            hedged_wasted=sr.hedged_wasted, prefetched=prefetched,
+            prefetches_launched=prefetches_launched,
+        )
+        self.receipts.append(receipt)
+        return receipt
+
+    def _resolve(self, requests):
+        contract = self._client.contract
+        resolved = []
+        for blob_id, offset, length in requests:
+            if length is None:
+                length = contract.blobs[blob_id].size_bytes - offset
+            resolved.append((blob_id, offset, length))
+        return resolved
+
     def get_many(
         self,
         requests: list[tuple[int, int, int | None]],
@@ -152,35 +189,33 @@ class ShelbySession:
         """Batched reads: (blob_id, offset, length|None) triples, all routed
         across the fleet in ONE pass — nodes batch-decode across requests."""
         self._settle_check()
-        contract = self._client.contract
-        resolved = []
-        for blob_id, offset, length in requests:
-            if length is None:
-                length = contract.blobs[blob_id].size_bytes - offset
-            resolved.append((blob_id, offset, length))
-        served = self._fleet.serve_ranges(resolved, client=client, t_ms=t_ms)
-        receipts = []
-        for sr in served:
-            # pay on delivery: the bytes are in hand, split the per-byte fee
-            # across serving nodes in proportion to chunksets served
-            total_cs = sum(sr.chunksets_by_node.values())
-            payments: dict[str, float] = {}
-            for rpc_id, count in sr.chunksets_by_node.items():
-                amount = max(
-                    self._price * len(sr.data) * count / total_cs, 1e-12
-                )
-                self._channel(rpc_id).pay(amount)
-                payments[rpc_id] = amount
-            receipt = ReadReceipt(
-                blob_id=sr.blob_id, offset=sr.offset, length=sr.length,
-                data=sr.data, latency_ms=sr.latency_ms, payments=payments,
-                chunksets_by_node=dict(sr.chunksets_by_node),
-                cache_hits=sr.cache_hits, hedges_launched=sr.hedges_launched,
-                hedged_wasted=sr.hedged_wasted,
-            )
-            self.receipts.append(receipt)
-            receipts.append(receipt)
-        return receipts
+        served = self._fleet.serve_ranges(
+            self._resolve(requests), client=client, t_ms=t_ms
+        )
+        return [self._receipt_for(sr) for sr in served]
+
+    def replay(self, requests, *, trace: bool = False):
+        """Open-loop replay of a workload's :class:`ReadRequest` list on ONE
+        shared event loop: every request is a concurrent task spawned at its
+        arrival time, so hedge timers, failure recoveries, SP disk queues
+        and NIC transfers of in-flight requests genuinely interleave.
+
+        Payments stay pay-on-delivery, applied at each request's completion
+        time in deterministic event order; dropped requests debit nothing.
+        Returns ``(receipts, ReplayResult)`` — ``receipts[i]`` is ``None``
+        when request ``i`` was dropped.
+        """
+        self._settle_check()
+        from repro.net.workloads import replay_open_loop
+
+        receipts: list[ReadReceipt | None] = [None] * len(requests)
+
+        def on_served(i, req, sr):
+            receipts[i] = self._receipt_for(sr)
+
+        result = replay_open_loop(self._fleet, requests, on_served=on_served,
+                                  trace=trace)
+        return receipts, result
 
     def read(
         self,
@@ -199,9 +234,12 @@ class ShelbySession:
         return self.read(blob_id, offset, length).data
 
     # -- streaming -----------------------------------------------------------------
-    def open(self, blob_id: int) -> "BlobReader":
+    def open(self, blob_id: int, readahead: int = 0) -> "BlobReader":
+        """`readahead=N` prefetches the next N same-sized windows as
+        event-loop tasks overlapping each read's own fetch (see
+        :class:`BlobReader`)."""
         self._settle_check()
-        return BlobReader(self, blob_id)
+        return BlobReader(self, blob_id, readahead=readahead)
 
     def stream(self, blob_id: int, chunk_size: int | None = None):
         """Yield :class:`ReadReceipt` per chunk, sequentially through the
@@ -280,14 +318,30 @@ class ShelbySession:
 
 class BlobReader:
     """Seekable file-like view of a blob; every `read` is a paid, verified
-    fleet read recorded as a receipt on the owning session."""
+    fleet read recorded as a receipt on the owning session.
 
-    def __init__(self, session: ShelbySession, blob_id: int):
+    With ``readahead=N`` the reader prefetches the next N same-sized
+    windows *in the same fleet pass* as the current read: every range in a
+    ``serve_ranges`` batch is its own task on the event loop, so the
+    prefetch legs overlap the current read's legs on the simulated clock
+    (the current read's latency is still only its own slowest leg).
+    Prefetched windows are paid on delivery like any read (their receipts
+    carry ``prefetched=True``); a sequential consumer then drains them from
+    the buffer without touching the fleet again.  ``prefetch_hits`` /
+    ``prefetches_issued`` count the overlap on the reader; the triggering
+    read's receipt records ``prefetches_launched``.
+    """
+
+    def __init__(self, session: ShelbySession, blob_id: int, readahead: int = 0):
         self._session = session
         self.blob_id = blob_id
         self.size = session._client.contract.blobs[blob_id].size_bytes
         self._pos = 0
         self._closed = False
+        self._readahead = max(0, int(readahead))
+        self._buffer: dict[tuple[int, int], ReadReceipt] = {}
+        self.prefetches_issued = 0
+        self.prefetch_hits = 0
 
     def readable(self) -> bool:
         return not self._closed
@@ -317,7 +371,31 @@ class BlobReader:
         length = remaining if n is None or n < 0 else min(n, remaining)
         if length == 0:
             return b""
-        receipt = self._session.read(self.blob_id, self._pos, length)
+        self._session._settle_check()  # even buffered reads need a live session
+        receipt = self._buffer.pop((self._pos, length), None)
+        if receipt is not None:
+            self.prefetch_hits += 1
+        else:
+            windows = [(self._pos, length)]
+            nxt = self._pos + length
+            for _ in range(self._readahead):
+                if nxt >= self.size:
+                    break
+                w = (nxt, min(length, self.size - nxt))
+                if w not in self._buffer:
+                    windows.append(w)
+                nxt += w[1]
+            served = self._session._fleet.serve_ranges(
+                [(self.blob_id, off, ln) for off, ln in windows]
+            )
+            receipt = self._session._receipt_for(
+                served[0], prefetches_launched=len(windows) - 1
+            )
+            for sr in served[1:]:
+                self._buffer[(sr.offset, sr.length)] = self._session._receipt_for(
+                    sr, prefetched=True
+                )
+            self.prefetches_issued += len(windows) - 1
         self._pos += len(receipt.data)
         return receipt.data
 
@@ -455,8 +533,13 @@ class ShelbyClient:
     ) -> list[ReadReceipt]:
         return self.current_session.get_many(requests, client=client, t_ms=t_ms)
 
-    def open(self, blob_id: int) -> BlobReader:
-        return self.current_session.open(blob_id)
+    def replay(self, requests, *, trace: bool = False):
+        """Concurrent open-loop replay through the implicit session (see
+        :meth:`ShelbySession.replay`)."""
+        return self.current_session.replay(requests, trace=trace)
+
+    def open(self, blob_id: int, readahead: int = 0) -> BlobReader:
+        return self.current_session.open(blob_id, readahead=readahead)
 
     def stream(self, blob_id: int, chunk_size: int | None = None):
         return self.current_session.stream(blob_id, chunk_size)

@@ -35,6 +35,23 @@ class SPBehavior:
     latency_ms: float = 1.0
 
 
+@dataclasses.dataclass
+class ServiceSpec:
+    """The SP's service model on the event engine (§2.4 serving).
+
+    ``disk_ms_per_chunk`` is the per-chunk-read service time (``None``
+    defers to ``SPBehavior.latency_ms`` so straggler injection keeps
+    working); ``slots`` is how many chunk reads the SP's disks serve
+    concurrently.  On a shared event loop the slots are a FIFO resource
+    — a hot SP *queues* excess requests instead of answering every one
+    after a flat latency, so tail latency under load comes from queueing
+    theory, not from a constant.
+    """
+
+    disk_ms_per_chunk: float | None = None
+    slots: int = 4
+
+
 @dataclasses.dataclass(frozen=True)
 class AuditProof:
     """What an auditee broadcasts (§4.1): the sample + its Merkle proof."""
@@ -49,9 +66,11 @@ class AuditProof:
 
 
 class StorageProvider:
-    def __init__(self, sp_id: int, behavior: SPBehavior | None = None, tree_cache: int = 256):
+    def __init__(self, sp_id: int, behavior: SPBehavior | None = None, tree_cache: int = 256,
+                 service: ServiceSpec | None = None):
         self.sp_id = sp_id
         self.behavior = behavior or SPBehavior()
+        self.service = service or ServiceSpec()
         self._chunks: dict[tuple[int, int, int], np.ndarray] = {}
         self._trees: OrderedDict[tuple[int, int, int], cm.MerkleTree] = OrderedDict()
         self._tree_cache = tree_cache
@@ -93,6 +112,13 @@ class StorageProvider:
         return tree
 
     # -- read path (paid, §2.4) ----------------------------------------------------
+    def service_ms(self) -> float:
+        """Per-chunk disk service time (the event engine sleeps this long
+        while holding one of the SP's `service.slots`)."""
+        if self.service.disk_ms_per_chunk is not None:
+            return self.service.disk_ms_per_chunk
+        return self.behavior.latency_ms
+
     def serve_chunk(self, blob_id: int, chunkset: int, chunk: int):
         """Returns (chunk_bytes, latency_ms) or None.
 
@@ -109,7 +135,7 @@ class StorageProvider:
         if self.behavior.corrupt:
             data = data.copy()
             data.reshape(-1)[0] ^= 0xFF
-        return data, self.behavior.latency_ms
+        return data, self.service_ms()
 
     def serve_subchunks(self, blob_id: int, chunkset: int, chunk: int, ids: list[int]):
         """MSR repair helper read: only the requested sub-chunks (planes)."""
@@ -118,7 +144,7 @@ class StorageProvider:
         key = (blob_id, chunkset, chunk)
         if key not in self._chunks:
             return None
-        return self._chunks[key][ids], self.behavior.latency_ms
+        return self._chunks[key][ids], self.service_ms()
 
     def receive_payment(self, amount: float) -> None:
         """A channel micropayment arrived (fresh refund signed over to us)."""
@@ -175,9 +201,13 @@ class StorageProvider:
             )
 
     def _retain(self, auditee: int, proof: AuditProof):
-        pos = sum(1 for (a, _) in self.retained if a == auditee)
-        # position = index among THIS auditor's recorded entries for auditee
-        pos = len([1 for b in self.scoreboard.bits.get(auditee, [])]) - 1
+        # position = index of the just-recorded entry in THIS auditor's
+        # scoreboard bit vector for the auditee — the same coordinate
+        # `select_ata_entries` samples from `Scoreboard.ones()`, so
+        # audit-the-auditor lookups land on the right proof even when the
+        # auditee's history mixes successes and failures (failed audits
+        # occupy a bit position but retain nothing)
+        pos = len(self.scoreboard.bits[auditee]) - 1
         self.retained[(auditee, pos)] = proof
 
     def reproduce_proof(self, auditee: int, position: int):

@@ -1,0 +1,68 @@
+"""Auditor proof retention (§4.2): positions must match scoreboard bits.
+
+Regression for the `_retain` position bug: the retained-proof key must be
+the index of the just-recorded entry in the auditor's scoreboard bit
+vector for that auditee — the exact coordinate audit-the-auditor samples
+from `Scoreboard.ones()` — even when the auditee's history mixes passed
+and failed audits (failures occupy a bit position but retain no proof).
+"""
+import numpy as np
+
+from repro.core.audit import Challenge
+from repro.core.commitments import chunk_samples
+
+
+def _challenge(epoch, auditee, meta, chunkset, chunk, sample, auditors):
+    return Challenge(epoch, auditee, meta.blob_id, chunkset, chunk, sample,
+                     tuple(auditors))
+
+
+def test_retained_positions_follow_scoreboard_bits(cluster, small_layout, rng):
+    contract, sps, rpc, client = cluster
+    meta = client.put(rng.integers(0, 256, 150_000, dtype=np.uint8).tobytes())
+    auditee = meta.placement[(0, 0)]
+    auditor_id = next(i for i in sps if i != auditee)
+    auditor = sps[auditor_id]
+
+    # audit #0: valid proof -> bit 0 is a '1', proof retained at position 0
+    ch0 = _challenge(0, auditee, meta, 0, 0, 3, [auditor_id])
+    auditor.audit_peer(ch0, sps[auditee].respond_challenge(ch0), contract)
+
+    # audit #1: no proof arrives -> bit 1 is a '0', nothing retained
+    ch1 = _challenge(0, auditee, meta, 0, 0, 5, [auditor_id])
+    auditor.audit_peer(ch1, None, contract)
+
+    # audit #2: valid proof again -> bit 2 is a '1', retained at position 2
+    ch2 = _challenge(0, auditee, meta, 0, 0, 7, [auditor_id])
+    auditor.audit_peer(ch2, sps[auditee].respond_challenge(ch2), contract)
+
+    assert auditor.scoreboard.bits[auditee] == [1, 0, 1]
+    assert auditor.scoreboard.ones() == [(auditee, 0), (auditee, 2)]
+    # audit-the-auditor reproduces proofs at exactly the '1' positions …
+    for pos in (0, 2):
+        resp = auditor.reproduce_proof(auditee, pos)
+        assert resp is not None
+        blob, cs, ck, sample, proof = resp
+        assert contract.verify_possession_proof(blob, cs, ck, sample, proof)
+    # … and has nothing at the failed position (a lazy auditor faking a
+    # retained proof there would be slashed)
+    assert auditor.reproduce_proof(auditee, 1) is None
+
+
+def test_retained_proof_matches_the_sampled_index(cluster, small_layout, rng):
+    """The retained sample is the one the challenge asked for, so an ATA
+    re-verification against on-chain roots succeeds for the honest auditor."""
+    contract, sps, rpc, client = cluster
+    meta = client.put(rng.integers(0, 256, 80_000, dtype=np.uint8).tobytes())
+    auditee = meta.placement[(0, 1)]
+    auditor_id = next(i for i in sps if i != auditee)
+    auditor = sps[auditor_id]
+    for k, sample in enumerate([2, 9, 4]):
+        ch = _challenge(0, auditee, meta, 0, 1, sample, [auditor_id])
+        proof = sps[auditee].respond_challenge(ch)
+        auditor.audit_peer(ch, proof, contract)
+        got = auditor.reproduce_proof(auditee, k)
+        assert got is not None
+        chunk_data = sps[auditee]._chunks[(meta.blob_id, 0, 1)]
+        expected_idx = sample % len(chunk_samples(chunk_data))
+        assert got[4].index == expected_idx
