@@ -22,7 +22,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import row
+from benchmarks.common import emit_json, row
 from repro.configs.shelby import CONFIG, resolve_decode_matmul
 from repro.core.contract import ShelbyContract
 from repro.core.placement import SPInfo
@@ -40,7 +40,7 @@ from repro.net.workloads import (
     zipf_hotset,
 )
 from repro.storage.blob import BlobLayout
-from repro.storage.rpc import BackboneTransport, RPCNode
+from repro.storage.rpc import AdmissionSpec, BackboneTransport, RPCNode
 from repro.storage.sdk import ShelbyClient
 from repro.storage.sp import ServiceSpec, StorageProvider
 
@@ -115,7 +115,8 @@ def _workloads(metas):
 
 
 def _fresh_fleet(layout, contract, bb, sps, policy, *, nic: NICSpec | None = None,
-                 cache_chunksets: int = 16):
+                 cache_chunksets: int = 16, admission: AdmissionSpec | None = None,
+                 single_flight: bool = True):
     rpcs = []
     for r in range(NUM_RPCS):
         node = f"rpc{r}"
@@ -127,6 +128,7 @@ def _fresh_fleet(layout, contract, bb, sps, policy, *, nic: NICSpec | None = Non
                 cache_chunksets=cache_chunksets,
                 transport=BackboneTransport(sps, bb, node),
                 decode_matmul=resolve_decode_matmul(CONFIG.decode_matmul),
+                admission=admission, single_flight=single_flight,
             )
         )
     bb.reset_accounting()
@@ -136,6 +138,7 @@ def _fresh_fleet(layout, contract, bb, sps, policy, *, nic: NICSpec | None = Non
 def run():
     layout, contract, bb, sps, metas = _world()
     p99_zipf = {}
+    grid_json = {}
     for pname, policy_factory in POLICIES.items():
         for wname, workload in _workloads(metas).items():
             fleet = _fresh_fleet(layout, contract, bb, sps, policy_factory())
@@ -170,6 +173,17 @@ def run():
                 f"hedges={fleet.hedges_launched()};waste={fleet.hedged_wasted()};"
                 f"cache_hit={fleet.cache_hit_rate():.2f}",
             )
+            grid_json[f"{pname}_{wname}"] = {
+                "goodput_mbps": goodput_mbps,
+                "p50_ms": p50,
+                "p99_ms": p99,
+                "hedges_launched": fleet.hedges_launched(),
+                "hedged_wasted": fleet.hedged_wasted(),
+                "cache_hit_rate": fleet.cache_hit_rate(),
+                "coalesced": fleet.coalesced(),
+                "shed_rate": 0.0,  # sequential grid never saturates a node
+            }
+    emit_json("serve_grid", grid_json)
     # regression-shaped bars: hedging must keep tail latency under the
     # 250 ms straggler for the cache-friendly hot-object workload
     for pname, p99 in p99_zipf.items():
@@ -183,18 +197,25 @@ def run_concurrent():
     queue on their disk slots, nodes serialize on 10 Gbps NICs.  Asserts
     the determinism digest (two identical runs on fresh fleets -> byte-
     identical per-request timings and link utilization), then ramps the
-    offered load and reports open-loop p50/p99 so the bench trajectory
-    captures *contention*, not just topology.
+    offered load TWICE — once with no admission control, once with the
+    overload controller on — so the bench trajectory shows the paper's
+    serving story under stress: the free-running fleet's p99 explodes past
+    the saturation knee, the admission-controlled fleet sheds the excess
+    (typed NACKs that debit nothing) and keeps the admitted tail bounded,
+    while single-flight dedup collapses hot-object stampedes.
     """
     nic = CONFIG.nic()  # 10 Gbps full-duplex per node by default
     world = _world(nic=nic, sp_slots=2)
     layout, contract, bb, sps, metas = world
     num_requests = 100 if SMOKE else 400
     rates_rps = [200, 1000, 5000]  # offered load ramp
+    # fetch budget per node: past it the node sheds instead of queueing
+    admitted_spec = AdmissionSpec(max_inflight_fetches=6)
 
-    def one_run(rate_rps, trace=False):
+    def one_run(rate_rps, admission=None, single_flight=True):
         fleet = _fresh_fleet(layout, contract, bb, sps, CacheAffinityPolicy(),
-                             nic=nic, cache_chunksets=8)
+                             nic=nic, cache_chunksets=8, admission=admission,
+                             single_flight=single_flight)
         reader = ShelbyClient(contract, fleet, deposit=1e9)
         reqs = zipf_hotset(
             metas, clients=["client0", "client1", "client2"],
@@ -216,23 +237,61 @@ def run_concurrent():
     )
     print(f"# concurrent determinism digest: {a.digest()[:16]} OK")
 
-    p99s = []
+    ramp_json = {}
+    free_p99, admitted_p99, admitted_shed, coalesced_total = [], [], [], 0
     for rate in rates_rps:
-        t0 = time.perf_counter()
-        fleet, result = one_run(rate)
-        wall = time.perf_counter() - t0
-        p50, p99 = result.percentile(50.0), result.percentile(99.0)
-        p99s.append(p99)
-        goodput = sum(r.nbytes for r in result.records) * 8e-3 / max(result.span_ms, 1e-9)
-        row(
-            f"backbone_serve/concurrent_{rate}rps",
-            wall * 1e6 / num_requests,
-            f"goodput={goodput:.1f}Mbps;p50={p50:.1f}ms;p99={p99:.1f}ms;"
-            f"dropped={result.dropped};hedges={fleet.hedges_launched()};"
-            f"waste={fleet.hedged_wasted()}",
-        )
-    assert p99s[-1] >= p99s[0], (
-        f"p99 did not grow with offered load: {p99s}"
+        per_rate = {"offered_rps": rate}
+        # "free" is the PR-3 fleet (no dedup, no admission — queues grow
+        # without bound); "admitted" is the overload-safe serving path
+        # (single-flight stampede collapse + per-node fetch budget)
+        for mode, admission, single_flight in (
+            ("free", None, False), ("admitted", admitted_spec, True),
+        ):
+            t0 = time.perf_counter()
+            fleet, result = one_run(rate, admission, single_flight)
+            wall = time.perf_counter() - t0
+            p50, p99 = result.percentile(50.0), result.percentile(99.0)
+            if mode == "free":
+                free_p99.append(p99)
+            else:
+                coalesced_total += fleet.coalesced()
+                admitted_p99.append(p99)
+                admitted_shed.append(result.shed_rate)
+            row(
+                f"backbone_serve/concurrent_{mode}_{rate}rps",
+                wall * 1e6 / num_requests,
+                f"goodput={result.goodput_mbps:.1f}Mbps;p50={p50:.1f}ms;"
+                f"p99={p99:.1f}ms;shed={result.shed};dropped={result.dropped};"
+                f"hedges={fleet.hedges_launched()};waste={fleet.hedged_wasted()};"
+                f"coalesced={fleet.coalesced()}",
+            )
+            per_rate[mode] = {
+                "goodput_mbps": result.goodput_mbps,
+                "p50_ms": p50,
+                "p99_ms": p99,
+                "shed_rate": result.shed_rate,
+                "dropped": result.dropped,
+                "hedges_launched": fleet.hedges_launched(),
+                "hedged_wasted": fleet.hedged_wasted(),
+                "coalesced": fleet.coalesced(),
+                "retried_legs": fleet.retried_legs,
+            }
+        ramp_json[f"{rate}rps"] = per_rate
+    emit_json("concurrent_ramp", ramp_json)
+
+    # the saturation story, asserted: the free-running fleet's tail blows
+    # up with offered load …
+    assert free_p99[-1] >= free_p99[0], (
+        f"p99 did not grow with offered load: {free_p99}"
+    )
+    # … single-flight collapses the Zipf hot set's stampedes …
+    assert coalesced_total > 0, "no dedup on a Zipf hot-set storm"
+    # … and past the knee the admission controller sheds (nonzero shed
+    # rate) to keep the admitted tail bounded below the free-running one
+    assert admitted_shed[-1] > 0.0, "no shedding at 3x saturation"
+    assert admitted_p99[-1] < free_p99[-1], (
+        f"admitted p99 {admitted_p99[-1]:.1f}ms not below free-running "
+        f"{free_p99[-1]:.1f}ms at {rates_rps[-1]}rps"
     )
 
 

@@ -1,7 +1,29 @@
-"""Shared benchmark helpers: timing + CSV row emission."""
+"""Shared benchmark helpers: timing, CSV row emission, and the
+machine-readable JSON sidecar CI tracks across PRs."""
 from __future__ import annotations
 
+import json
+import os
 import time
+
+
+def emit_json(section: str, payload) -> None:
+    """Merge ``payload`` under ``section`` into the JSON file named by the
+    ``BENCH_JSON`` env var (no-op when unset).  Sections merge read-modify-
+    write so several benchmark invocations in one CI run share a file —
+    `scripts/ci.sh` points every suite at ``BENCH_backbone.json`` and
+    uploads it as the run's bench-trajectory artifact."""
+    path = os.environ.get("BENCH_JSON")
+    if not path:
+        return
+    doc = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            doc = json.load(f)
+    doc[section] = payload
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
 
 
 def timeit(fn, *, repeats: int = 3, warmup: int = 1):

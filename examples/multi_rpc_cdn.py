@@ -13,7 +13,7 @@ import numpy as np
 from repro.core.contract import ShelbyContract
 from repro.core.placement import SPInfo
 from repro.net.backbone import Backbone
-from repro.net.fleet import CacheAffinityPolicy, LatencyAwarePolicy, RPCFleet
+from repro.net.fleet import CacheAffinityPolicy, RPCFleet
 from repro.net.workloads import zipf_hotset
 from repro.storage.blob import BlobLayout
 from repro.storage.rpc import BackboneTransport, RPCNode

@@ -44,6 +44,12 @@ class ShelbyConfig:
     # hot-cache policy per RPC node (LRU always; these add expiry/admission)
     rpc_cache_ttl_ms: float | None = None  # sim-clock TTL for decoded entries
     rpc_cache_admit_bytes: int | None = None  # skip caching decodes larger than this
+    # overload control per RPC node (all off -> no AdmissionSpec attached;
+    # see storage.rpc.AdmissionSpec for exact semantics)
+    rpc_single_flight: bool = True  # collapse concurrent same-chunkset misses
+    rpc_max_queued_requests: int | None = None  # admitted reads per node
+    rpc_max_inflight_fetches: int | None = None  # live SP fetch tasks per node
+    rpc_shed_deadline_ms: float | None = None  # brownout SLO on EWMA fetch ms
     # event-engine service/network model
     sp_service_slots: int = 4  # concurrent disk reads per SP (FIFO queue beyond)
     # per-node NIC line rate wherever a Backbone is built from this config
@@ -56,6 +62,21 @@ class ShelbyConfig:
         if self.nic_gbps is None:
             return None
         return NICSpec(egress_gbps=self.nic_gbps, ingress_gbps=self.nic_gbps)
+
+    def admission(self):
+        """The per-RPC-node AdmissionSpec these knobs describe, or None
+        when every limit is off (the node then never sheds)."""
+        from repro.storage.rpc import AdmissionSpec
+
+        if (self.rpc_max_queued_requests is None
+                and self.rpc_max_inflight_fetches is None
+                and self.rpc_shed_deadline_ms is None):
+            return None
+        return AdmissionSpec(
+            max_queued_requests=self.rpc_max_queued_requests,
+            max_inflight_fetches=self.rpc_max_inflight_fetches,
+            deadline_ms=self.rpc_shed_deadline_ms,
+        )
 
     def resolve_decode_matmul(self):
         return resolve_decode_matmul(self.decode_matmul)

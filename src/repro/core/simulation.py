@@ -42,6 +42,11 @@ class SimResult:
     sp_serving_income: dict[int, float] = dataclasses.field(default_factory=dict)
     rpc_serving_income: dict[str, float] = dataclasses.field(default_factory=dict)
     client_read_payments: float = 0.0  # sum over ReadReceipt payments
+    # overload outcomes of the per-epoch read storms (admission control +
+    # single-flight dedup): shed reads debit nothing; coalesced misses rode
+    # another request's in-flight fetch
+    reads_shed: int = 0
+    reads_coalesced: int = 0
 
     def utility(self, sp: int) -> float:
         return self.utilities[sp]
@@ -60,6 +65,8 @@ def run_sim(
     num_rpcs: int = 1,
     read_requests_per_epoch: int = 0,
     decode_matmul=None,  # e.g. configs.shelby.resolve_decode_matmul("pallas")
+    admission=None,  # storage.rpc.AdmissionSpec: shed past saturation
+    single_flight: bool = True,  # collapse concurrent same-chunkset misses
 ) -> SimResult:
     params = params or AuditParams(p_a=0.5, auditors_per_audit=4, C=50, p_ata=0.3)
     layout = layout or BlobLayout(k=4, m=2, chunkset_bytes_target=64 * 1024)
@@ -70,7 +77,8 @@ def run_sim(
         contract.register_sp(SPInfo(sp_id=i, stake=10_000.0, dc=f"dc{i % 3}"))
         sps[i] = StorageProvider(i, behaviors.get(i, SPBehavior()))
     rpcs = [
-        RPCNode(f"rpc{r}", contract, sps, layout, decode_matmul=decode_matmul)
+        RPCNode(f"rpc{r}", contract, sps, layout, decode_matmul=decode_matmul,
+                admission=admission, single_flight=single_flight)
         for r in range(num_rpcs)
     ]
     fleet = RPCFleet(rpcs, CacheAffinityPolicy())
@@ -90,6 +98,7 @@ def run_sim(
         sps[i].behavior.crashed = True
 
     utilities = {i: 0.0 for i in range(n)}
+    reads_shed = 0
     # storage costs: cheaters with drop_fraction save proportionally
     held = {}
     for meta in contract.blobs.values():
@@ -138,7 +147,8 @@ def run_sim(
                 seed=seed * 1009 + epoch,
                 arrival="poisson",
             )
-            client.replay(reqs)
+            _, replay = client.replay(reqs)
+            reads_shed += replay.shed
 
     # settle the read session: client->RPC channels broadcast their freshest
     # refunds and the RPC->SP channels cascade, so serving income reaches SP
@@ -161,6 +171,8 @@ def run_sim(
         sp_serving_income=dict(settlement.sp_income),
         rpc_serving_income=dict(settlement.node_income),
         client_read_payments=sum(r.total_paid for r in receipts),
+        reads_shed=reads_shed,
+        reads_coalesced=fleet.coalesced(),
     )
 
 

@@ -40,7 +40,6 @@ from repro.sharding import (
     tree_shape_structs,
     tree_shardings,
 )
-from repro.train import optimizer as opt_mod
 from repro.train.step import make_decode_step, make_prefill_step, make_train_step
 
 DEFAULT_OUT = "results/dryrun"

@@ -8,7 +8,6 @@ statistics in f32.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import math
 
 import jax

@@ -14,9 +14,6 @@ MoE aux losses ride the scan carry.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-import math
 
 import jax
 import jax.numpy as jnp
@@ -34,7 +31,7 @@ from repro.models.layers import (
     mlp_specs,
     norm_specs,
 )
-from repro.sharding import AxisCtx, ParamSpec
+from repro.sharding import ParamSpec
 
 
 def _embed_specs(cfg):

@@ -18,7 +18,6 @@ exactly the GShard capacity-factor semantics.
 """
 from __future__ import annotations
 
-import functools
 import math
 
 import jax

@@ -25,6 +25,11 @@ Tasks are plain Python generators that yield *effects*:
   :class:`Channel` (how a hedged fetch hears from its in-flight legs
   *and* its deadline timer through one ordered stream).
 
+:class:`SingleFlight` is the cache-stampede primitive built on ``Join``:
+concurrent callers asking for the same key share ONE spawned task (the
+first caller leads, the rest coalesce), so N simultaneous misses on a hot
+object cost one fetch instead of N.
+
 Sync callers keep working: wrap a task in a fresh loop and
 ``run_until`` it (see ``RPCNode.read_items_detailed``).  Concurrent
 drivers (``repro.net.workloads.replay_open_loop`` /
@@ -37,7 +42,7 @@ import dataclasses
 import heapq
 import itertools
 from collections import deque
-from typing import Any, Generator
+from typing import Any, Callable, Generator
 
 
 # -- effects (what a task may yield) ----------------------------------------------
@@ -155,6 +160,59 @@ class Channel:
             self._loop._push(self._loop.now, h, ("resume", value))
             return
         self._queue.append(value)
+
+
+class SingleFlight:
+    """Per-key in-flight task dedup (the classic cache-stampede collapse).
+
+    The first caller of :meth:`flight` for a key becomes the *leader*: its
+    factory generator is spawned on the loop and registered under the key.
+    Every later caller while that task is live is a *follower*: it gets the
+    leader's :class:`TaskHandle` back and simply ``Join``\\ s it — one fetch
+    serves all concurrent waiters, and the key is released the moment the
+    task finishes (success or error), so a later miss starts a fresh
+    flight.  Errors propagate to every joiner, exactly like ``Join``.
+
+    One instance is bound to one :class:`EventLoop`; holders that outlive a
+    loop (e.g. an ``RPCNode`` called through many private loops) should key
+    their instance by the loop (see ``RPCNode._single_flight_for``).
+    """
+
+    def __init__(self, loop: "EventLoop"):
+        self.loop = loop
+        self._inflight: dict[Any, TaskHandle] = {}
+        self.launched = 0  # flights that actually spawned a task
+        self.coalesced = 0  # callers that piggybacked on a live flight
+
+    def live(self, key: Any) -> bool:
+        """True iff a flight for ``key`` is currently in the air (a call
+        to :meth:`flight` now would coalesce instead of spawning)."""
+        h = self._inflight.get(key)
+        return h is not None and not h.done and not h.cancelled
+
+    def flight(self, key: Any, factory: Callable[[], Generator],
+               label: str | None = None) -> tuple["TaskHandle", bool]:
+        """Return ``(handle, leader)`` — ``leader`` is True iff this call
+        spawned the task (the caller should Join the handle either way)."""
+        live = self._inflight.get(key)
+        if live is not None and not live.done and not live.cancelled:
+            self.coalesced += 1
+            return live, False
+
+        def flown():
+            try:
+                result = yield from factory()
+            finally:
+                # release on the same event step the task finishes, so a
+                # miss arriving any later starts a fresh flight
+                if self._inflight.get(key) is h:
+                    del self._inflight[key]
+            return result
+
+        h = self.loop.spawn(flown(), label=label or f"flight{key}")
+        self._inflight[key] = h
+        self.launched += 1
+        return h, True
 
 
 class EventLoop:

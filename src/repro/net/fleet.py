@@ -50,6 +50,10 @@ class ServedRange:
     cache_hits: int = 0
     hedges_launched: int = 0
     hedged_wasted: int = 0
+    coalesced: int = 0  # chunksets that joined another request's fetch
+    # rpc_id -> chunksets this range served on that node AFTER its routed
+    # node shed the leg (retry-on-sibling); payments follow the server
+    retried_nodes: dict[str, int] = dataclasses.field(default_factory=dict)
 
 
 class LatencyAwarePolicy:
@@ -114,6 +118,10 @@ class RPCFleet:
         self.chunkset_reads = 0
         self.bytes_served = 0
         self.request_latencies_ms: list[float] = []
+        # overload accounting (legs = one node's share of one request)
+        self.shed_legs = 0  # node legs refused at admission
+        self.retried_legs = 0  # shed legs rescued by a sibling
+        self.retried_chunksets = 0  # chunksets served via those retries
 
     @property
     def primary(self) -> RPCNode:
@@ -168,7 +176,17 @@ class RPCFleet:
         the fleet over the public internet, not the dedicated backbone): a
         range's latency is the max over its own chunksets' legs plus the
         client<->node round trip.
+
+        Overload: a node leg refused at admission (:class:`Overloaded`) is
+        retried ONCE on the least-loaded sibling — the NACK is cheap, so
+        the edge re-issues: extra latency is the round trip burned on the
+        refusing node plus the sibling's own propagation.  If the sibling
+        sheds too, the whole request surfaces as `Overloaded` (replay
+        drivers record it as *shed*, and pay-on-delivery means it debits
+        nothing).  Payments follow the node that actually served.
         """
+        from repro.storage.rpc import Overloaded  # deferred: import cycle
+
         lay = self.primary.layout
         contract = self.primary.contract
         per_range_items: list[list[tuple[int, int]]] = []
@@ -186,19 +204,39 @@ class RPCFleet:
 
         decoded: dict[tuple[int, int], np.ndarray] = {}
         item_stats: dict[tuple[int, int], object] = {}
-        prop_of: dict[int, float] = {}
+        served_by: dict[tuple[int, int], int] = {}  # who ACTUALLY served
+        retried: set[tuple[int, int]] = set()
+        extra_ms: dict[tuple[int, int], float] = {}  # client round trips
         handles: dict[int, object] = {}
         for i, node_items in by_node.items():
             prop = self._prop(i, client)
-            prop_of[i] = prop
 
             def node_task(i=i, node_items=node_items, prop=prop):
                 if prop > 0:
                     yield Sleep(prop)  # request reaches the serving node
-                result = yield from self.rpcs[i].read_items_task(
-                    loop, node_items, label=f"{label}/{self.node_ids[i]}"
-                )
-                return result
+                try:
+                    out, stats = yield from self.rpcs[i].read_items_task(
+                        loop, node_items, label=f"{label}/{self.node_ids[i]}"
+                    )
+                    return out, stats, i, 2.0 * prop
+                except Overloaded:
+                    self.shed_legs += 1
+                    j = self._sibling(i)
+                    if j is None:
+                        raise  # fleet of one: nowhere to retry
+                    # the NACK came back (prop) and the edge re-issues to
+                    # the sibling (its own propagation); if the sibling
+                    # sheds too, Overloaded propagates and drops the request
+                    prop_j = self._prop(j, client)
+                    if prop + prop_j > 0:
+                        yield Sleep(prop + prop_j)
+                    out, stats = yield from self.rpcs[j].read_items_task(
+                        loop, node_items, label=f"{label}/{self.node_ids[j]}"
+                    )
+                    self.retried_legs += 1
+                    self.retried_chunksets += len(node_items)
+                    self.routed[j] += len(node_items)  # load landed on the sibling
+                    return out, stats, j, 2.0 * prop + 2.0 * prop_j
 
             handles[i] = loop.spawn(
                 node_task(), label=f"{label}/{self.node_ids[i]}"
@@ -206,14 +244,19 @@ class RPCFleet:
         first_err: Exception | None = None
         for i, h in handles.items():
             try:
-                out, stats = yield Join(h)
+                out, stats, srv, extra = yield Join(h)
             except Exception as e:  # harvest every node leg before raising
                 if first_err is None:
                     first_err = e
                 continue
-            self._observe(i, max(s.latency_ms for s in stats.values()))
+            self._observe(srv, max(s.latency_ms for s in stats.values()))
             decoded.update(out)
             item_stats.update(stats)
+            for key in out:
+                served_by[key] = srv
+                extra_ms[key] = extra
+                if srv != i:
+                    retried.add(key)
         if first_err is not None:
             raise first_err
 
@@ -226,26 +269,38 @@ class RPCFleet:
                 meta.size_bytes,
             )
             by_node_count: dict[str, int] = {}
-            latency, hits, hedges, wasted = 0.0, 0, 0, 0
+            retried_nodes: dict[str, int] = {}
+            latency, hits, hedges, wasted, coalesced = 0.0, 0, 0, 0, 0
             for key in items:
-                i = routed_node[key]
-                nid = self.node_ids[i]
+                nid = self.node_ids[served_by[key]]
                 by_node_count[nid] = by_node_count.get(nid, 0) + 1
+                if key in retried:
+                    retried_nodes[nid] = retried_nodes.get(nid, 0) + 1
                 s = item_stats[key]
-                latency = max(latency, s.latency_ms + 2.0 * prop_of[i])
+                latency = max(latency, s.latency_ms + extra_ms[key])
                 hits += s.cache_hit
                 hedges += s.hedges
                 wasted += s.wasted
+                coalesced += s.coalesced
             served.append(
                 ServedRange(
                     blob_id=blob_id, offset=offset, length=length, data=data,
                     latency_ms=latency, chunksets_by_node=by_node_count,
                     cache_hits=hits, hedges_launched=hedges, hedged_wasted=wasted,
+                    coalesced=coalesced, retried_nodes=retried_nodes,
                 )
             )
             self.bytes_served += len(data)
             self.request_latencies_ms.append(latency)
         return served
+
+    def _sibling(self, i: int) -> int | None:
+        """Deterministic overflow target for a shed leg: the least-routed
+        OTHER node (ties by index); None on a fleet of one."""
+        others = [j for j in range(len(self.rpcs)) if j != i]
+        if not others:
+            return None
+        return min(others, key=lambda j: (self.routed[j], j))
 
     def serve_ranges(
         self,
@@ -288,6 +343,19 @@ class RPCFleet:
     def hedges_launched(self) -> int:
         """Requests launched by hedge deadlines only (straggler mitigation)."""
         return sum(r.stats.hedges_launched for r in self.rpcs)
+
+    def hedges_suppressed(self) -> int:
+        """Hedge deadlines the per-node overload gate refused to act on."""
+        return sum(r.stats.hedges_suppressed for r in self.rpcs)
+
+    def coalesced(self) -> int:
+        """Cache misses that piggybacked on an in-flight fetch (stampede
+        collapse) instead of fetching from SPs again."""
+        return sum(r.stats.coalesced for r in self.rpcs)
+
+    def requests_shed(self) -> int:
+        """Node-level admission refusals (each is one leg's Overloaded)."""
+        return sum(r.stats.shed_requests for r in self.rpcs)
 
     def latency_percentiles(self, *qs: float) -> tuple[float, ...]:
         if not self.request_latencies_ms:

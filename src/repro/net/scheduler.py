@@ -43,6 +43,7 @@ class FetchResult:
     bad: int = 0  # responses failing verification (corruption, §2.3)
     failed: int = 0  # transport-level failures (crashed SP, missing chunk)
     hedges: int = 0  # requests launched by the hedge deadline timer
+    hedges_suppressed: int = 0  # deadline fired but the hedge_gate said no
 
     @property
     def wasted(self) -> int:
@@ -78,9 +79,19 @@ class HedgedScheduler:
         issue_task: Callable,  # (key, sp_id) -> generator returning payload|None
         verify: Callable[[int, object], bool] | None = None,
         label: str = "fetch",
+        hedge_gate: Callable[[], bool] | None = None,
     ):
         """Generator task; spawn it on the shared loop (its legs and hedge
-        timer live on the same heap as every other request's)."""
+        timer live on the same heap as every other request's).
+
+        ``hedge_gate`` is the overload hook: consulted when the deadline
+        fires, and hedges are launched only while it returns True.  Hedges
+        multiply offered load exactly when the system can least afford it,
+        so an overloaded node sheds its *hedges* first (counted in
+        ``FetchResult.hedges_suppressed``) before shedding whole requests.
+        Failure recovery is never gated — a failed primary must be
+        replaced or the fetch cannot reach k shards at all.
+        """
         if len(candidates) < k:
             raise ValueError(f"need >= {k} candidates, got {len(candidates)}")
         order = sorted(candidates, key=lambda c: (c[2], c[0]))
@@ -122,8 +133,12 @@ class HedgedScheduler:
             key, data = yield Recv(chan)
             if key is _HEDGE:
                 # stragglers outstanding past the deadline: hedge + re-arm
+                # (unless the overload gate says the node cannot afford it)
                 launched = 0
                 while launched < self.hedge and queue:
+                    if hedge_gate is not None and not hedge_gate():
+                        res.hedges_suppressed += 1
+                        break
                     launch()
                     launched += 1
                 res.hedges += launched

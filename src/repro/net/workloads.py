@@ -24,6 +24,10 @@ The *drivers* push those requests through the shared event engine:
 Both return a :class:`ReplayResult` whose ``digest()`` hashes every
 per-request timing and the backbone's per-link byte counters — the
 determinism gate CI asserts on (two identical runs -> identical digests).
+Requests the fleet refuses at admission (typed ``Overloaded`` NACKs) are
+recorded as *shed*, separately from hard failures; ``sweep_open_loop``
+ramps the offered rate and returns the goodput / shed-rate / p99 series
+that make the saturation knee measurable.
 """
 from __future__ import annotations
 
@@ -159,6 +163,7 @@ class RequestRecord:
     ok: bool
     client: str
     blob_id: int
+    shed: bool = False  # refused at admission (Overloaded), not a failure
 
 
 @dataclasses.dataclass
@@ -172,7 +177,32 @@ class ReplayResult:
 
     @property
     def dropped(self) -> int:
-        return sum(1 for r in self.records if not r.ok)
+        """Hard failures only; admission refusals are counted by `shed`."""
+        return sum(1 for r in self.records if not r.ok and not r.shed)
+
+    @property
+    def shed(self) -> int:
+        """Requests the fleet refused at admission (typed Overloaded)."""
+        return sum(1 for r in self.records if r.shed)
+
+    @property
+    def shed_rate(self) -> float:
+        return self.shed / len(self.records) if self.records else 0.0
+
+    @property
+    def offered_rps(self) -> float:
+        """Offered load: arrivals over the arrival window (requests/s)."""
+        if len(self.records) < 2:
+            return 0.0
+        window = max(r.t_ms for r in self.records) - min(r.t_ms for r in self.records)
+        return (len(self.records) - 1) * 1e3 / window if window > 0 else float("inf")
+
+    @property
+    def goodput_mbps(self) -> float:
+        """Delivered bits (served requests only) over the serving span."""
+        if self.span_ms <= 0:
+            return 0.0
+        return sum(r.nbytes for r in self.records if r.ok) * 8e-3 / self.span_ms
 
     def latencies_ms(self) -> list[float]:
         return [r.latency_ms for r in self.records if r.ok]
@@ -189,16 +219,63 @@ class ReplayResult:
         for r in self.records:
             h.update(
                 f"{r.index}|{r.t_ms!r}|{r.finish_ms!r}|{r.latency_ms!r}|"
-                f"{r.nbytes}|{r.ok}|{r.client}|{r.blob_id}\n".encode()
+                f"{r.nbytes}|{r.ok}|{r.client}|{r.blob_id}|{r.shed}\n".encode()
             )
         for key in sorted(self.link_bytes, key=str):
             h.update(f"{key}={self.link_bytes[key]}\n".encode())
         return h.hexdigest()
 
 
-def _serve_one(loop, fleet, records, i, req, label, on_served):
+@dataclasses.dataclass
+class LoadSweep:
+    """Goodput-vs-offered-load and shed-rate series across an open-loop
+    ramp: one :class:`ReplayResult` per offered rate, with the aligned
+    series the saturation analysis (and `benchmarks.backbone_serve`) plots.
+    The *knee* is where goodput stops tracking offered load — with
+    admission control it shows up as a rising shed rate and a bounded p99
+    instead of a diverging queue.
+    """
+
+    rates_rps: list[float]
+    results: list[ReplayResult]
+
+    @property
+    def goodput_mbps(self) -> list[float]:
+        return [r.goodput_mbps for r in self.results]
+
+    @property
+    def shed_rate(self) -> list[float]:
+        return [r.shed_rate for r in self.results]
+
+    def p99_ms(self) -> list[float]:
+        return [r.percentile(99.0) for r in self.results]
+
+    def p50_ms(self) -> list[float]:
+        return [r.percentile(50.0) for r in self.results]
+
+
+def sweep_open_loop(make_fleet, make_requests, rates_rps, *,
+                    driver=None) -> LoadSweep:
+    """Replay the same workload shape at each offered rate on a FRESH fleet
+    (``make_fleet() -> fleet``, ``make_requests(rate_rps) -> [ReadRequest]``)
+    and collect the aligned saturation series.  ``driver`` defaults to
+    :func:`replay_open_loop`; pass a session-aware closure to keep reads
+    paid (see ``ShelbySession.replay``)."""
+    results = []
+    for rate in rates_rps:
+        fleet = make_fleet()
+        reqs = make_requests(rate)
+        if driver is None:
+            results.append(replay_open_loop(fleet, reqs))
+        else:
+            results.append(driver(fleet, reqs))
+    return LoadSweep(rates_rps=list(rates_rps), results=results)
+
+
+def _serve_one(loop, fleet, records, i, req, label, on_served, on_shed=None):
     """Task body shared by both drivers: serve one request, record its fate."""
-    from repro.storage.rpc import ReadError  # deferred: avoids an import cycle
+    # deferred imports: storage.rpc imports repro.net.scheduler
+    from repro.storage.rpc import Overloaded, ReadError
 
     t0 = loop.now
     try:
@@ -206,6 +283,14 @@ def _serve_one(loop, fleet, records, i, req, label, on_served):
             loop, [(req.blob_id, req.offset, req.length)],
             client=req.client, label=label,
         )
+    except Overloaded:
+        # load-shed: the fleet said no before doing the work — a cheap,
+        # fast NACK that debits nothing (distinct from a hard failure)
+        records[i] = RequestRecord(i, t0, loop.now, loop.now - t0, 0, False,
+                                   req.client, req.blob_id, shed=True)
+        if on_shed is not None:
+            on_shed(i, req, loop.now - t0)
+        return
     except ReadError:
         # unrecoverable under current failures: the request is dropped (and
         # pay-on-delivery means it debits nothing)
@@ -238,6 +323,7 @@ def replay_open_loop(
     requests: list[ReadRequest],
     *,
     on_served=None,  # (index, request, ServedRange) -> None, completion order
+    on_shed=None,  # (index, request, nack_latency_ms) -> None
     trace: bool = False,
 ) -> ReplayResult:
     """Open-loop replay: every request is its own task spawned at its
@@ -247,7 +333,8 @@ def replay_open_loop(
     records: list[RequestRecord | None] = [None] * len(requests)
     for i, req in enumerate(requests):
         loop.spawn(
-            _serve_one(loop, fleet, records, i, req, f"req{i}", on_served),
+            _serve_one(loop, fleet, records, i, req, f"req{i}", on_served,
+                       on_shed),
             at_ms=req.t_ms, label=f"req{i}",
         )
     loop.run()

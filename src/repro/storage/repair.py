@@ -17,7 +17,6 @@ from __future__ import annotations
 
 import dataclasses
 
-import numpy as np
 
 from repro.core import commitments as cm
 from repro.core.contract import ShelbyContract

@@ -31,6 +31,13 @@ Channel settlement (`settle_sp_channels`) broadcasts the freshest refunds
 and realizes each SP's serving income; client sessions paying this node
 credit `serving_income` when *their* channel settles.  A small hot-cache of
 decoded chunksets fronts popular content (§5.3).
+
+Overload safety: concurrent cache misses on the same chunkset collapse
+onto ONE fetch through a per-node :class:`~repro.net.events.SingleFlight`
+table (cache-stampede dedup), and an optional :class:`AdmissionSpec` sheds
+requests with a typed :class:`Overloaded` NACK — by queue depth, in-flight
+fetch budget, or a brownout latency SLO — so saturation produces a rising
+shed rate with bounded tails instead of unbounded queue growth.
 """
 from __future__ import annotations
 
@@ -42,7 +49,15 @@ import numpy as np
 from repro.core import commitments as cm
 from repro.core.contract import BlobState, ShelbyContract
 from repro.core.payments import PaymentLedger
-from repro.net.events import Acquire, EventLoop, Join, Release, Sleep, Transfer
+from repro.net.events import (
+    Acquire,
+    EventLoop,
+    Join,
+    Release,
+    SingleFlight,
+    Sleep,
+    Transfer,
+)
 from repro.net.scheduler import FetchResult, HedgedScheduler
 from repro.storage.blob import BlobLayout
 from repro.storage.sp import StorageProvider
@@ -50,6 +65,54 @@ from repro.storage.sp import StorageProvider
 
 class ReadError(Exception):
     pass
+
+
+class Overloaded(ReadError):
+    """Typed load-shed outcome: the node refused this request at admission.
+
+    Subclasses :class:`ReadError` so existing drop paths keep working, but
+    carries enough structure (`rpc_id`, `reason`) for the fleet to retry on
+    a sibling and for replay drivers to account a *shed rate* separately
+    from hard failures.  ``reason`` is one of ``"queue"`` (admitted-request
+    cap), ``"fetches"`` (in-flight SP fetch cap), ``"deadline"`` (EWMA
+    fetch latency above the brownout SLO).
+    """
+
+    def __init__(self, rpc_id: str, reason: str):
+        self.rpc_id = rpc_id
+        self.reason = reason
+        super().__init__(f"rpc {rpc_id} overloaded ({reason})")
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionSpec:
+    """Overload-control knobs for one RPC node.
+
+    "Designed to serve" means degrading *gracefully* at saturation: past
+    these limits a request is shed with :class:`Overloaded` (a cheap, fast
+    NACK) instead of joining an unbounded queue and dragging every other
+    request's tail latency with it.
+
+    * ``max_queued_requests`` — concurrently *admitted* read requests on
+      this node (a read counts from admission until its last chunkset is
+      decoded); ``None`` = unlimited.
+    * ``max_inflight_fetches`` — live chunkset fetch tasks this node may
+      have outstanding toward SPs.  Coalesced (single-flight) waiters do
+      not count: they add no SP load.  ``None`` = unlimited.
+    * ``deadline_ms`` — brownout SLO: while the node's EWMA of recent
+      fetch latency exceeds this AND fetches are in flight, new requests
+      are shed before doing any work (observed latency is the honest
+      congestion signal — it already includes SP disk queues and NIC
+      serialization).  An idle node is always admitted as a probe, so the
+      estimate re-measures and the brownout lifts when load drops instead
+      of latching on a stale EWMA.  ``None`` = off.
+    * ``ewma_alpha`` — smoothing for that latency estimate.
+    """
+
+    max_queued_requests: int | None = None
+    max_inflight_fetches: int | None = None
+    deadline_ms: float | None = None
+    ewma_alpha: float = 0.2
 
 
 @dataclasses.dataclass
@@ -62,8 +125,11 @@ class ReadStats:
     cache_hits: int = 0
     hedged_wasted: int = 0  # requests that contributed no shard (incl. failures) — unpaid
     hedges_launched: int = 0  # deadline-triggered hedge requests only
+    hedges_suppressed: int = 0  # hedge deadlines the overload gate refused
     chunkset_fetches: int = 0
     fetch_ms_total: float = 0.0  # simulated clock, not wall time
+    coalesced: int = 0  # misses that piggybacked on an in-flight fetch
+    shed_requests: int = 0  # reads refused at admission (Overloaded)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,6 +140,7 @@ class ItemStats:
     latency_ms: float  # simulated fetch time (0 for cache hits)
     hedges: int = 0
     wasted: int = 0
+    coalesced: bool = False  # joined another request's in-flight fetch
 
 
 # -- transports: how chunk requests reach SPs -------------------------------------
@@ -170,6 +237,8 @@ class RPCNode:
         decode_matmul=None,
         cache_ttl_ms: float | None = None,
         cache_admit_bytes: int | None = None,
+        admission: AdmissionSpec | None = None,
+        single_flight: bool = True,
     ):
         self.rpc_id = rpc_id
         self.contract = contract
@@ -191,6 +260,12 @@ class RPCNode:
         self._cache_size = cache_chunksets
         self.cache_ttl_ms = cache_ttl_ms
         self.cache_admit_bytes = cache_admit_bytes
+        self.admission = admission
+        self.single_flight = single_flight
+        self._sf: SingleFlight | None = None  # bound to one loop at a time
+        self._admitted = 0  # reads between admission and final decode
+        self._inflight_fetches = 0  # live chunkset fetch tasks toward SPs
+        self._ewma_fetch_ms: float | None = None  # congestion signal
         self.stats = ReadStats()
         contract.register_rpc(rpc_id)
 
@@ -268,7 +343,8 @@ class RPCNode:
             return True
 
         result = yield from self.scheduler.fetch_task(
-            loop, lay.k, candidates, issue_task, verify, label=label
+            loop, lay.k, candidates, issue_task, verify, label=label,
+            hedge_gate=self._allow_hedge if self.admission is not None else None,
         )
         if len(result.shards) < lay.k:
             raise ReadError(
@@ -277,9 +353,90 @@ class RPCNode:
         self.stats.chunks_used += result.used
         self.stats.hedged_wasted += result.wasted
         self.stats.hedges_launched += result.hedges
+        self.stats.hedges_suppressed += result.hedges_suppressed
         self.stats.chunkset_fetches += 1
         self.stats.fetch_ms_total += result.latency_ms
+        alpha = self.admission.ewma_alpha if self.admission is not None else 0.2
+        if self._ewma_fetch_ms is None:
+            self._ewma_fetch_ms = result.latency_ms
+        else:
+            self._ewma_fetch_ms = (
+                (1 - alpha) * self._ewma_fetch_ms + alpha * result.latency_ms
+            )
         return result
+
+    def _counted_fetch(self, loop: EventLoop, key: tuple[int, int], label: str):
+        """One chunkset fetch held against the node's in-flight budget.
+
+        The CALLER increments ``_inflight_fetches`` at spawn time — before
+        this generator first steps — so simultaneously-arriving requests
+        see each other's flights at admission; only the decrement lives
+        here (the flight knows when it lands)."""
+        try:
+            result = yield from self._fetch_chunkset_task(
+                loop, key[0], key[1], label=label
+            )
+        finally:
+            self._inflight_fetches -= 1
+        return result
+
+    # -- overload control (admission + single-flight) ------------------------------
+    def _allow_hedge(self) -> bool:
+        """Hedges are shed first: they multiply SP load exactly when the
+        node is at its budget or already missing its latency SLO."""
+        spec = self.admission
+        if spec is None:
+            return True
+        if (spec.max_inflight_fetches is not None
+                and self._inflight_fetches >= spec.max_inflight_fetches):
+            return False
+        if (spec.deadline_ms is not None and self._ewma_fetch_ms is not None
+                and self._ewma_fetch_ms > spec.deadline_ms):
+            return False
+        return True
+
+    def _single_flight_for(self, loop: EventLoop) -> SingleFlight | None:
+        """The node's in-flight fetch table, bound to the loop it runs on.
+
+        Sequential sync entry points each spin a private loop; a table of
+        handles from a dead loop is useless, so rebind lazily.  Concurrent
+        misses only ever share one loop, which is the case dedup targets.
+        """
+        if not self.single_flight:
+            return None
+        if self._sf is None or self._sf.loop is not loop:
+            self._sf = SingleFlight(loop)
+        return self._sf
+
+    def _shed(self, reason: str) -> Overloaded:
+        self.stats.shed_requests += 1
+        return Overloaded(self.rpc_id, reason)
+
+    def _check_admission(self, new_flights: int | None = None) -> None:
+        """Raise :class:`Overloaded` if this request must be shed.
+
+        Called twice per read: at entry (queue depth + brownout SLO — both
+        known before any work) and again with ``new_flights`` once the
+        cache/coalesce pass has established how many *new* fetch tasks the
+        request would add."""
+        spec = self.admission
+        if spec is None:
+            return
+        if new_flights is None:
+            if (spec.max_queued_requests is not None
+                    and self._admitted >= spec.max_queued_requests):
+                raise self._shed("queue")
+            # brownout sheds only while work is in flight: an idle node is
+            # always admitted as a probe — its fetch re-measures the EWMA,
+            # so a node that browned out under a burst recovers once the
+            # queue drains instead of shedding forever on a stale estimate
+            if (spec.deadline_ms is not None and self._ewma_fetch_ms is not None
+                    and self._ewma_fetch_ms > spec.deadline_ms
+                    and self._inflight_fetches > 0):
+                raise self._shed("deadline")
+        elif (spec.max_inflight_fetches is not None and new_flights > 0
+                and self._inflight_fetches + new_flights > spec.max_inflight_fetches):
+            raise self._shed("fetches")
 
     def _cache_get(self, key: tuple[int, int], now_ms: float) -> np.ndarray | None:
         entry = self._cache.get(key)
@@ -327,12 +484,33 @@ class RPCNode:
         one misses: chunksets of *different blobs* with the same erasure
         pattern still stack into one wide GF matmul, so a `get_many`
         spanning requests amortizes kernel dispatch across all of them.
+
+        Overload safety: misses go through the node's *single-flight*
+        table — a miss on a chunkset another in-flight request is already
+        fetching Joins that fetch instead of duplicating it (cache-stampede
+        collapse; the waiter's ItemStats is marked ``coalesced``).  With an
+        :class:`AdmissionSpec` attached, the request is shed with
+        :class:`Overloaded` when the node is past its queue/fetch budget or
+        its brownout SLO — *before* it adds load.
         """
+        self._check_admission()  # queue depth + brownout SLO (may raise)
+        self._admitted += 1
+        try:
+            result = yield from self._read_items_admitted(loop, items, label)
+        finally:
+            self._admitted -= 1
+        return result
+
+    def _read_items_admitted(
+        self, loop: EventLoop, items: list[tuple[int, int]], label: str
+    ):
         out: dict[tuple[int, int], np.ndarray] = {}
         stats: dict[tuple[int, int], ItemStats] = {}
         fetched: dict[tuple[int, int], FetchResult] = {}
-        pending: list[tuple[tuple[int, int], object]] = []
+        pending: list[tuple[tuple[int, int], object, bool]] = []
+        misses: list[tuple[int, int]] = []
         seen: set[tuple[int, int]] = set()
+        sf = self._single_flight_for(loop)
         for key in items:
             if key in seen:
                 continue
@@ -343,15 +521,38 @@ class RPCNode:
                 out[key] = cached
                 stats[key] = ItemStats(cache_hit=True, latency_ms=0.0)
             else:
+                misses.append(key)
+        # fetch-budget admission: only *new* flights add SP load — misses
+        # that will coalesce onto an in-flight fetch ride along for free
+        new_flights = (
+            len(misses) if sf is None
+            else sum(1 for key in misses if not sf.live(key))
+        )
+        self._check_admission(new_flights)  # may raise Overloaded
+        t0 = loop.now
+        for key in misses:
+            if sf is None:
                 h = loop.spawn(
-                    self._fetch_chunkset_task(
-                        loop, key[0], key[1], label=f"{label}/cs{key}"
-                    ),
+                    self._counted_fetch(loop, key, f"{label}/cs{key}"),
                     label=f"{label}/cs{key}",
                 )
-                pending.append((key, h))
+                leader = True
+            else:
+                h, leader = sf.flight(
+                    key,
+                    lambda key=key: self._counted_fetch(loop, key, f"{label}/cs{key}"),
+                    label=f"{label}/cs{key}",
+                )
+            if leader:
+                # count the flight NOW (its task has not stepped yet), so
+                # another request admitted later in this same event step
+                # already sees it against the fetch budget
+                self._inflight_fetches += 1
+            else:
+                self.stats.coalesced += 1
+            pending.append((key, h, leader))
         first_err: Exception | None = None
-        for key, h in pending:
+        for key, h, leader in pending:
             try:
                 res = yield Join(h)
             except Exception as e:  # harvest every child before propagating
@@ -361,9 +562,13 @@ class RPCNode:
             fetched[key] = res
             stats[key] = ItemStats(
                 cache_hit=False,
-                latency_ms=res.latency_ms,
-                hedges=res.hedges,
-                wasted=res.wasted,
+                # a coalesced waiter only waited for the residual of a fetch
+                # someone else started; its hedges/waste belong to the leader
+                latency_ms=res.latency_ms if leader
+                else max(0.0, h.finished_ms - t0),
+                hedges=res.hedges if leader else 0,
+                wasted=res.wasted if leader else 0,
+                coalesced=not leader,
             )
         if first_err is not None:
             raise first_err

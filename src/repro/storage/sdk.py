@@ -60,6 +60,12 @@ class ReadReceipt:
     `payments` maps serving rpc_id -> the micropayment made to that node's
     channel for THIS read; cache/hedge stats cover only this read's
     chunksets.  All latencies are simulated milliseconds.
+
+    Overload bookkeeping: ``shed=True`` marks a read the fleet refused at
+    admission — it carries no data and (pay-on-delivery) debits nothing;
+    ``retried_nodes`` names the sibling nodes that rescued legs a routed
+    node shed; ``coalesced`` counts chunksets that rode another in-flight
+    request's fetch instead of hitting SPs again.
     """
 
     blob_id: int
@@ -76,6 +82,10 @@ class ReadReceipt:
     # prefetch / this read overlapped N prefetches with its own fetch
     prefetched: bool = False
     prefetches_launched: int = 0
+    # overload bookkeeping (admission control + single-flight dedup)
+    shed: bool = False
+    coalesced: int = 0
+    retried_nodes: dict[str, int] = dataclasses.field(default_factory=dict)
 
     @property
     def total_paid(self) -> float:
@@ -166,6 +176,7 @@ class ShelbySession:
             cache_hits=sr.cache_hits, hedges_launched=sr.hedges_launched,
             hedged_wasted=sr.hedged_wasted, prefetched=prefetched,
             prefetches_launched=prefetches_launched,
+            coalesced=sr.coalesced, retried_nodes=dict(sr.retried_nodes),
         )
         self.receipts.append(receipt)
         return receipt
@@ -203,7 +214,11 @@ class ShelbySession:
         Payments stay pay-on-delivery, applied at each request's completion
         time in deterministic event order; dropped requests debit nothing.
         Returns ``(receipts, ReplayResult)`` — ``receipts[i]`` is ``None``
-        when request ``i`` was dropped.
+        when request ``i`` was dropped by a hard failure.  A request the
+        fleet *shed* at admission instead gets a zero-payment receipt with
+        ``shed=True`` (documented refusal: you asked, the fleet NACKed,
+        you paid nothing), and its record is marked ``shed`` in the
+        :class:`~repro.net.workloads.ReplayResult`.
         """
         self._settle_check()
         from repro.net.workloads import replay_open_loop
@@ -213,8 +228,16 @@ class ShelbySession:
         def on_served(i, req, sr):
             receipts[i] = self._receipt_for(sr)
 
+        def on_shed(i, req, nack_ms):
+            receipts[i] = ReadReceipt(
+                blob_id=req.blob_id, offset=req.offset, length=req.length,
+                data=b"", latency_ms=nack_ms, payments={},
+                chunksets_by_node={}, shed=True,
+            )
+            self.receipts.append(receipts[i])
+
         result = replay_open_loop(self._fleet, requests, on_served=on_served,
-                                  trace=trace)
+                                  on_shed=on_shed, trace=trace)
         return receipts, result
 
     def read(

@@ -6,7 +6,6 @@ pure functions suitable for pjit."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp

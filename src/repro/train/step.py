@@ -8,7 +8,6 @@ keeps activation memory at one-microbatch high-water) and AdamW/ZeRO-1.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

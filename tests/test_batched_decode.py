@@ -3,7 +3,6 @@ import numpy as np
 import pytest
 
 from repro.core.clay import ClayCode
-from repro.storage.rpc import RPCNode
 
 
 def _codeword_sets(code, rng, trials, w=16):

@@ -9,7 +9,6 @@ import pathlib
 import pytest
 
 from repro.configs import ALL_ARCHS
-from repro.configs.base import SHAPES
 
 RESULTS = pathlib.Path(__file__).resolve().parent.parent / "results" / "dryrun"
 

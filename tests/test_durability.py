@@ -1,5 +1,4 @@
 """Appendix A closed forms reproduce the paper's numbers exactly."""
-import math
 
 import pytest
 

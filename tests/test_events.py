@@ -122,7 +122,7 @@ def test_nic_egress_serializes_transfers():
 
 # -- a small backbone world --------------------------------------------------------
 def _world(num_sps=8, *, slots=4, service_ms=None, nic=None, num_rpcs=2,
-           cache=16, scheduler_kw=None):
+           cache=16, scheduler_kw=None, single_flight=True, admission=None):
     layout = BlobLayout(k=4, m=2, chunkset_bytes_target=64 * 1024)
     contract = ShelbyContract()
     bb = Backbone.mesh(3, base_latency_ms=4.0, gbps=10.0)
@@ -141,7 +141,8 @@ def _world(num_sps=8, *, slots=4, service_ms=None, nic=None, num_rpcs=2,
         rpcs.append(
             RPCNode(node, contract, sps, layout, cache_chunksets=cache,
                     transport=BackboneTransport(sps, bb, node),
-                    scheduler=HedgedScheduler(**(scheduler_kw or {})))
+                    scheduler=HedgedScheduler(**(scheduler_kw or {})),
+                    single_flight=single_flight, admission=admission)
         )
     bb.register_node("client", "dc0")
     fleet = RPCFleet(rpcs, CacheAffinityPolicy(), backbone=bb)
@@ -223,11 +224,15 @@ def test_concurrent_hedges_interleave_and_differ_from_sequential(rng):
 def test_sp_queue_p99_grows_with_offered_load():
     """A single hot chunkset hammered open-loop: every request's legs land
     on the same four single-slot SPs, so tail latency is queueing delay and
-    must rise monotonically with the arrival rate."""
+    must rise monotonically with the arrival rate.  Single-flight dedup is
+    OFF here — it would (correctly) collapse the identical concurrent
+    misses into one fetch and erase the very queueing this test measures;
+    tests/test_overload.py asserts that collapse explicitly."""
     p99s = []
     for interarrival_ms in (50.0, 5.0, 1.0):
         contract, bb, sps, fleet, client = _world(
-            num_sps=6, slots=1, service_ms=8.0, num_rpcs=1, cache=0
+            num_sps=6, slots=1, service_ms=8.0, num_rpcs=1, cache=0,
+            single_flight=False,
         )
         rng = np.random.default_rng(1)
         meta = client.put(rng.integers(0, 256, 60_000, dtype=np.uint8).tobytes())

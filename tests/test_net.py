@@ -4,7 +4,7 @@ import pytest
 
 from repro.core.contract import ShelbyContract
 from repro.core.placement import SPInfo
-from repro.net.backbone import Backbone, LinkSpec
+from repro.net.backbone import Backbone
 from repro.net.fleet import (
     CacheAffinityPolicy,
     LatencyAwarePolicy,
@@ -13,7 +13,6 @@ from repro.net.fleet import (
 )
 from repro.net.scheduler import HedgedScheduler
 from repro.net.workloads import training_epoch, video_streaming, zipf_hotset
-from repro.storage.blob import BlobLayout
 from repro.storage.rpc import BackboneTransport, RPCNode
 from repro.storage.sdk import ShelbyClient
 from repro.storage.sp import StorageProvider

@@ -1,0 +1,431 @@
+"""Overload-safe serving: single-flight fetch dedup + admission control.
+
+The acceptance gates of ISSUE 4: N concurrent misses on one hot chunkset
+collapse into exactly one SP fetch; shed requests debit nothing and settle
+cleanly; admission keeps the p99 of *admitted* requests bounded under a 3x
+saturation storm while the unadmitted fleet's p99 diverges; and the
+determinism digest is unchanged by admission for sub-saturation workloads
+(the controller only acts past the knee).
+"""
+import numpy as np
+import pytest
+
+from repro.core.contract import ShelbyContract
+from repro.core.placement import SPInfo
+from repro.net.backbone import Backbone
+from repro.net.events import EventLoop, Join, SingleFlight, Sleep
+from repro.net.fleet import CacheAffinityPolicy, RPCFleet
+from repro.net.scheduler import HedgedScheduler
+from repro.net.workloads import ReadRequest, replay_open_loop, sweep_open_loop
+from repro.storage.blob import BlobLayout
+from repro.storage.rpc import AdmissionSpec, BackboneTransport, Overloaded, RPCNode
+from repro.storage.sdk import ShelbyClient
+from repro.storage.sp import ServiceSpec, StorageProvider
+
+
+def _world(num_sps=8, *, slots=4, service_ms=None, num_rpcs=1, cache=16,
+           scheduler_kw=None, single_flight=True, admission=None, policy=None):
+    """Small backbone world mirroring tests/test_events.py's helper."""
+    layout = BlobLayout(k=4, m=2, chunkset_bytes_target=64 * 1024)
+    contract = ShelbyContract()
+    bb = Backbone.mesh(3, base_latency_ms=4.0, gbps=10.0)
+    sps = {}
+    for i in range(num_sps):
+        dc = f"dc{i % 3}"
+        contract.register_sp(SPInfo(sp_id=i, stake=1000.0, dc=dc, rack=f"r{i % 4}"))
+        sps[i] = StorageProvider(
+            i, service=ServiceSpec(disk_ms_per_chunk=service_ms, slots=slots)
+        )
+        bb.register_node(f"sp{i}", dc)
+    specs = admission if isinstance(admission, list) else [admission] * num_rpcs
+    rpcs = []
+    for r in range(num_rpcs):
+        node = f"rpc{r}"
+        bb.register_node(node, f"dc{r % 3}")
+        rpcs.append(
+            RPCNode(node, contract, sps, layout, cache_chunksets=cache,
+                    transport=BackboneTransport(sps, bb, node),
+                    scheduler=HedgedScheduler(**(scheduler_kw or {})),
+                    single_flight=single_flight, admission=specs[r])
+        )
+    bb.register_node("client", "dc0")
+    fleet = RPCFleet(rpcs, policy or CacheAffinityPolicy(), backbone=bb)
+    client = ShelbyClient(contract, fleet, deposit=1e9)
+    return contract, bb, sps, fleet, client
+
+
+class _AlwaysFirst:
+    """Routing policy pinning every chunkset on node 0 (retry tests)."""
+
+    def pick(self, key, client, fleet):
+        return 0
+
+
+# -- the SingleFlight primitive ----------------------------------------------------
+def test_single_flight_leader_and_followers_share_one_task():
+    loop = EventLoop()
+    sf = SingleFlight(loop)
+    runs = []
+
+    def work():
+        runs.append(loop.now)
+        yield Sleep(10.0)
+        return "payload"
+
+    got = []
+
+    def caller(name):
+        h, leader = sf.flight("key", work)
+        res = yield Join(h)
+        got.append((name, leader, res, loop.now))
+
+    for name in ("a", "b", "c"):
+        loop.spawn(caller(name))
+    loop.run()
+    assert runs == [0.0]  # the work ran exactly once
+    assert [g[1] for g in got] == [True, False, False]
+    assert all(g[2] == "payload" and g[3] == 10.0 for g in got)
+    assert sf.launched == 1 and sf.coalesced == 2
+    # the key is released on completion: a later call starts a fresh flight
+    loop2_calls = []
+
+    def late():
+        h, leader = sf.flight("key", work)
+        loop2_calls.append(leader)
+        yield Join(h)
+
+    loop.spawn(late())
+    loop.run()
+    assert loop2_calls == [True] and sf.launched == 2
+
+
+def test_single_flight_propagates_leader_error_to_all():
+    loop = EventLoop()
+    sf = SingleFlight(loop)
+    errs = []
+
+    def boom():
+        yield Sleep(1.0)
+        raise ValueError("fetch died")
+
+    def caller(name):
+        h, _ = sf.flight("k", boom)
+        try:
+            yield Join(h)
+        except ValueError as e:
+            errs.append((name, str(e)))
+
+    loop.spawn(caller("a"))
+    loop.spawn(caller("b"))
+    loop.run()
+    assert errs == [("a", "fetch died"), ("b", "fetch died")]
+    assert not sf.live("k")  # released despite the error
+
+
+# -- single-flight through the read path -------------------------------------------
+def test_concurrent_same_chunkset_misses_fetch_once():
+    """Five simultaneous requests for one chunkset -> exactly 1 SP fetch,
+    4 coalesced waiters, and SP-side load of a single fetch."""
+    contract, bb, sps, fleet, client = _world(num_sps=6, cache=16)
+    rng = np.random.default_rng(0)
+    meta = client.put(rng.integers(0, 256, 60_000, dtype=np.uint8).tobytes())
+    node = fleet.primary
+    node._cache.clear()
+    node.stats.chunks_requested = 0
+    paid_before = node.stats.payments
+    reqs = [ReadRequest(0.0, "client", meta.blob_id, 0, 1000) for _ in range(5)]
+    receipts, result = client.replay(reqs)
+    assert all(r.ok for r in result.records)
+    assert node.stats.chunkset_fetches == 1  # ONE fetch hit the SPs
+    assert node.stats.coalesced == 4
+    assert node.stats.chunks_requested == 4  # k primaries, once
+    # RPC->SP pay-on-delivery happened for one fetch, not five
+    assert node.stats.payments - paid_before == pytest.approx(
+        4 * node.price_per_chunk
+    )
+    assert sum(r.coalesced for r in receipts) == 4
+    # every coalesced waiter still got verified bytes and paid the node
+    assert all(len(r.data) == 1000 and r.total_paid > 0 for r in receipts)
+    client.settle()
+
+
+def test_coalesced_waiter_latency_is_residual():
+    """A request arriving halfway through an in-flight fetch waits only
+    the remaining half, not a full fetch."""
+    contract, bb, sps, fleet, client = _world(num_sps=6, cache=0,
+                                              service_ms=40.0, slots=1)
+    rng = np.random.default_rng(1)
+    meta = client.put(rng.integers(0, 256, 60_000, dtype=np.uint8).tobytes())
+    fleet.primary._cache.clear()
+    reqs = [
+        ReadRequest(0.0, "client", meta.blob_id, 0, 1000),
+        ReadRequest(30.0, "client", meta.blob_id, 0, 1000),
+    ]
+    result = replay_open_loop(fleet, reqs)
+    r0, r1 = result.records
+    assert r0.ok and r1.ok
+    assert fleet.coalesced() == 1
+    # both finish when the shared fetch lands; the late joiner's latency is
+    # the residual
+    assert r1.latency_ms < r0.latency_ms
+    assert r1.finish_ms == pytest.approx(r0.finish_ms)
+
+
+# -- admission control / load shedding ---------------------------------------------
+def test_shed_requests_debit_nothing_and_settle_cleanly():
+    spec = AdmissionSpec(max_queued_requests=1)
+    contract, bb, sps, fleet, client = _world(
+        num_sps=6, slots=1, service_ms=20.0, cache=0,
+        single_flight=False, admission=spec,
+    )
+    rng = np.random.default_rng(2)
+    metas = [
+        client.put(rng.integers(0, 256, 60_000, dtype=np.uint8).tobytes())
+        for _ in range(4)
+    ]
+    # simultaneous burst on distinct blobs: one admitted, the rest shed
+    reqs = [ReadRequest(0.0, "client", m.blob_id, 0, 1000) for m in metas]
+    receipts, result = client.replay(reqs)
+    assert result.shed > 0 and result.shed == fleet.requests_shed()
+    assert 0.0 < result.shed_rate <= 0.75
+    served = [r for r in result.records if r.ok]
+    shed = [r for r in result.records if r.shed]
+    assert served and shed and len(served) + len(shed) == 4
+    # shed requests: marked, empty, unpaid — and receipts document the NACK
+    for rec in shed:
+        assert not rec.ok and rec.nbytes == 0
+        assert receipts[rec.index].shed
+        assert receipts[rec.index].data == b""
+        assert receipts[rec.index].total_paid == 0.0
+    # settlement conserves: only served reads moved money
+    settlement = client.settle()
+    paid = sum(r.total_paid for r in client.current_session.receipts) \
+        if client._session else None
+    assert paid is None  # settle() cleared the implicit session
+    served_paid = sum(
+        receipts[r.index].total_paid for r in served
+    )
+    assert settlement.total_node_income == pytest.approx(served_paid, abs=1e-5)
+
+
+def test_overloaded_is_a_typed_read_error():
+    from repro.storage.rpc import ReadError
+
+    err = Overloaded("rpc0", "queue")
+    assert isinstance(err, ReadError)
+    assert err.rpc_id == "rpc0" and err.reason == "queue"
+
+
+def test_shed_leg_retries_on_sibling():
+    """Node 0 always refuses; the fleet re-issues to node 1, the receipt
+    names the rescuer, and payments follow the node that served."""
+    contract, bb, sps, fleet, client = _world(
+        num_rpcs=2, admission=[AdmissionSpec(max_queued_requests=0), None],
+        policy=_AlwaysFirst(),
+    )
+    rng = np.random.default_rng(3)
+    data = rng.integers(0, 256, 60_000, dtype=np.uint8).tobytes()
+    meta = client.put(data)
+    receipt = client.read(meta.blob_id, 0, 2000, client="client")
+    assert receipt.data == data[:2000]
+    assert receipt.chunksets_by_node == {"rpc1": 1}  # rescuer served
+    assert receipt.retried_nodes == {"rpc1": 1}
+    assert receipt.payments.keys() == {"rpc1"}  # money follows the server
+    assert fleet.shed_legs == 1 and fleet.retried_legs == 1
+    assert fleet.retried_chunksets == 1
+    assert fleet.rpcs[0].stats.shed_requests == 1
+    client.settle()
+
+
+def test_whole_fleet_overloaded_drops_request_as_shed():
+    contract, bb, sps, fleet, client = _world(
+        num_rpcs=2,
+        admission=[AdmissionSpec(max_queued_requests=0)] * 2,
+        policy=_AlwaysFirst(),
+    )
+    rng = np.random.default_rng(4)
+    meta = client.put(rng.integers(0, 256, 60_000, dtype=np.uint8).tobytes())
+    with pytest.raises(Overloaded):
+        client.read(meta.blob_id, 0, 1000, client="client")
+    reqs = [ReadRequest(0.0, "client", meta.blob_id, 0, 1000)]
+    receipts, result = client.replay(reqs)
+    assert result.shed == 1 and not result.records[0].ok
+    assert receipts[0].shed and receipts[0].total_paid == 0.0
+    client.settle()
+
+
+def test_admitted_p99_bounded_under_saturation_storm():
+    """A 3x-saturation open-loop storm on single-slot SPs: without
+    admission the queue grows without bound and p99 diverges; with a fetch
+    budget, admitted requests keep a bounded p99 and the excess is shed."""
+    rng = np.random.default_rng(5)
+    data = [rng.integers(0, 256, 60_000, dtype=np.uint8).tobytes()
+            for _ in range(8)]
+
+    def storm(admission):
+        # service 20 ms on 1-slot SPs, k=4 legs/read across 6 SPs
+        # -> capacity ~75 rps; offer ~225 rps (3x) for 60 requests
+        contract, bb, sps, fleet, client = _world(
+            num_sps=6, slots=1, service_ms=20.0, cache=0,
+            single_flight=False, admission=admission,
+        )
+        metas = [client.put(d) for d in data]
+        reqs = [
+            ReadRequest(i * 4.5, "client", metas[i % len(metas)].blob_id, 0, 1000)
+            for i in range(60)
+        ]
+        result = replay_open_loop(fleet, reqs)
+        return fleet, result
+
+    _, free = storm(None)
+    assert free.shed == 0
+    fleet, capped = storm(AdmissionSpec(max_inflight_fetches=4))
+    assert capped.shed > 0
+    assert all(r.ok or r.shed for r in capped.records)
+    # the unadmitted tail diverges; the admitted tail stays bounded
+    assert capped.percentile(99.0) * 2 < free.percentile(99.0), (
+        f"admitted p99 {capped.percentile(99.0):.1f}ms not clearly below "
+        f"unadmitted {free.percentile(99.0):.1f}ms"
+    )
+    # and admitted requests kept goodput flowing
+    assert len(capped.latencies_ms()) >= 10
+
+
+def test_sweep_open_loop_traces_the_saturation_knee():
+    rng = np.random.default_rng(6)
+    data = [rng.integers(0, 256, 60_000, dtype=np.uint8).tobytes()
+            for _ in range(6)]
+
+    def make_fleet():
+        contract, bb, sps, fleet, client = _world(
+            num_sps=6, slots=1, service_ms=10.0, cache=0,
+            single_flight=False, admission=AdmissionSpec(max_inflight_fetches=4),
+        )
+        make_fleet.metas = [client.put(d) for d in data]
+        return fleet
+
+    def make_requests(rate_rps):
+        gap = 1e3 / rate_rps
+        return [
+            ReadRequest(i * gap, "client",
+                        make_fleet.metas[i % len(data)].blob_id, 0, 1000)
+            for i in range(40)
+        ]
+
+    sweep = sweep_open_loop(make_fleet, make_requests, [20.0, 400.0])
+    assert sweep.shed_rate[0] == 0.0  # far below the knee: nothing shed
+    assert sweep.shed_rate[1] > 0.0  # past it: the controller acts
+    assert sweep.p99_ms()[1] < 10 * max(sweep.p99_ms()[0], 1.0)  # bounded tail
+    assert len(sweep.goodput_mbps) == 2
+
+
+def test_hedges_shed_first_at_the_fetch_budget():
+    """With concurrent fetches at the budget, deadline fires are answered
+    by suppression, not extra SP load."""
+
+    def run(admission):
+        # aggressive deadlines: they fire while all four fetches are still
+        # holding the budget, so the gate (not completion luck) decides
+        contract, bb, sps, fleet, client = _world(
+            num_sps=6, slots=1, service_ms=25.0, cache=0, single_flight=False,
+            scheduler_kw=dict(hedge=2, deadline_factor=0.3, min_deadline_ms=1.0),
+            admission=admission,
+        )
+        rng = np.random.default_rng(7)
+        metas = [client.put(rng.integers(0, 256, 60_000, dtype=np.uint8).tobytes())
+                 for _ in range(4)]
+        reqs = [ReadRequest(i * 1.0, "client", metas[i].blob_id, 0, 1000)
+                for i in range(4)]
+        result = replay_open_loop(fleet, reqs)
+        return fleet, result
+
+    free_fleet, free = run(None)
+    assert free_fleet.hedges_launched() > 0  # queues blow the deadline
+    capped_fleet, capped = run(AdmissionSpec(max_inflight_fetches=4))
+    assert capped_fleet.hedges_suppressed() > 0
+    assert capped_fleet.hedges_launched() < free_fleet.hedges_launched()
+
+
+def test_fetch_budget_holds_for_simultaneous_arrivals():
+    """Flights count against the budget at SPAWN time: N requests landing
+    in the same event step must not all slip under max_inflight_fetches
+    before any flight task has stepped."""
+    contract, bb, sps, fleet, client = _world(
+        num_sps=6, slots=1, service_ms=20.0, cache=0, single_flight=False,
+        admission=AdmissionSpec(max_inflight_fetches=1),
+    )
+    rng = np.random.default_rng(10)
+    metas = [client.put(rng.integers(0, 256, 60_000, dtype=np.uint8).tobytes())
+             for _ in range(3)]
+    # three distinct blobs, identical arrival time
+    reqs = [ReadRequest(0.0, "client", m.blob_id, 0, 1000) for m in metas]
+    result = replay_open_loop(fleet, reqs)
+    assert sum(1 for r in result.records if r.ok) == 1
+    assert result.shed == 2  # the budget saw the first flight immediately
+
+
+def test_brownout_recovers_when_idle():
+    """A latched EWMA above the SLO must not shed forever: an idle node
+    admits the next request as a probe and re-measures."""
+    contract, bb, sps, fleet, client = _world(
+        num_sps=6, slots=1, service_ms=30.0, cache=0, single_flight=False,
+        admission=AdmissionSpec(deadline_ms=1.0),  # SLO below any real fetch
+    )
+    rng = np.random.default_rng(11)
+    meta = client.put(rng.integers(0, 256, 60_000, dtype=np.uint8).tobytes())
+    # first read seeds the EWMA far above the 1 ms SLO
+    r1 = client.read(meta.blob_id, 0, 1000, client="client")
+    assert fleet.primary._ewma_fetch_ms > 1.0
+    # the node is idle again -> the next sequential read is admitted as a
+    # probe instead of being shed on the stale estimate
+    r2 = client.read(meta.blob_id, 0, 2000, client="client")
+    assert len(r2.data) == 2000
+    assert fleet.primary.stats.shed_requests == 0
+    # but with work in flight the brownout DOES shed the concurrent burst
+    reqs = [ReadRequest(0.0, "client", meta.blob_id, 0, 1000),
+            ReadRequest(1.0, "client", meta.blob_id, 4000, 1000)]
+    result = replay_open_loop(fleet, reqs)
+    assert result.shed == 1
+    client.settle()
+
+
+def test_dropped_excludes_shed():
+    contract, bb, sps, fleet, client = _world(
+        admission=AdmissionSpec(max_queued_requests=0),
+    )
+    rng = np.random.default_rng(12)
+    meta = client.put(rng.integers(0, 256, 60_000, dtype=np.uint8).tobytes())
+    reqs = [ReadRequest(0.0, "client", meta.blob_id, 0, 1000)]
+    receipts, result = client.replay(reqs)
+    assert result.shed == 1 and result.dropped == 0  # refusals aren't drops
+
+
+# -- determinism -------------------------------------------------------------------
+def test_admission_leaves_sub_saturation_digest_unchanged():
+    """Below the knee the controller must be a no-op: the digest of a
+    gentle workload is byte-identical with and without an AdmissionSpec,
+    and reproducible across runs."""
+
+    def run_once(admission):
+        contract, bb, sps, fleet, client = _world(num_sps=6, admission=admission)
+        rng = np.random.default_rng(8)
+        metas = [
+            client.put(rng.integers(0, 256, 100_000, dtype=np.uint8).tobytes())
+            for _ in range(3)
+        ]
+        bb.reset_accounting()
+        from repro.net.workloads import zipf_hotset
+
+        reqs = zipf_hotset(metas, clients=["client"], num_requests=30,
+                           interarrival_ms=25.0, arrival="poisson", seed=9)
+        receipts, result = client.replay(reqs)
+        client.settle()
+        return result
+
+    generous = AdmissionSpec(max_queued_requests=10_000,
+                             max_inflight_fetches=10_000, deadline_ms=1e9)
+    a = run_once(None)
+    b = run_once(generous)
+    c = run_once(generous)
+    assert a.shed == b.shed == 0
+    assert a.digest() == b.digest() == c.digest()

@@ -7,7 +7,6 @@ from repro.core.contract import ShelbyContract
 from repro.core.payments import ChannelError
 from repro.core.placement import SPInfo
 from repro.net.fleet import CacheAffinityPolicy, RPCFleet
-from repro.storage.blob import BlobLayout
 from repro.storage.rpc import ReadError, RPCNode
 from repro.storage.sdk import ShelbyClient
 from repro.storage.sp import StorageProvider

@@ -4,7 +4,6 @@ import subprocess
 import sys
 import textwrap
 
-import pytest
 
 from repro.sharding import DECODE_RULES, TRAIN_RULES, logical_to_spec
 
