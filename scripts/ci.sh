@@ -65,6 +65,14 @@ echo "== concurrent-workload smoke (budget: ${CONCURRENT_BUDGET_S:-180}s) =="
 BACKBONE_SMOKE=1 run_budgeted "${CONCURRENT_BUDGET_S:-180}" "concurrent ramp" \
     python -m benchmarks.backbone_serve concurrent
 
+echo "== background-plane smoke (budget: ${BACKGROUND_BUDGET_S:-180}s) =="
+# audits + repair as paced background tasks on the SAME event loop as a
+# paid Poisson storm: asserts serving p99 inflation stays within the
+# configured background budget, that no foreground read is starved, and
+# that audit-proof/repair bytes actually land on NIC/trunk counters
+BACKBONE_SMOKE=1 run_budgeted "${BACKGROUND_BUDGET_S:-180}" "background planes" \
+    python -m benchmarks.backbone_serve background
+
 echo "== streaming smoke: video through BlobReader (budget: ${VIDEO_BUDGET_S:-120}s) =="
 # exercises the session API end to end: open/stream receipts, pay-on-delivery,
 # settlement conservation, and the 40 Mbps 4K bar under failures
@@ -77,7 +85,7 @@ import json, os
 path = os.environ["BENCH_JSON"]
 with open(path) as f:
     doc = json.load(f)
-for section in ("serve_grid", "concurrent_ramp"):
+for section in ("serve_grid", "concurrent_ramp", "background"):
     assert section in doc, f"{path} missing section {section!r}"
 print(f"{path}: {', '.join(sorted(doc))} OK")
 EOF

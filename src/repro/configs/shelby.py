@@ -55,6 +55,30 @@ class ShelbyConfig:
     # per-node NIC line rate wherever a Backbone is built from this config
     # (the concurrent serving bench); None = unlimited nodes
     nic_gbps: float | None = 10.0
+    # background planes (audits + repair) per SP: the share of disk slots
+    # background work may hold concurrently, the pacing between background
+    # ops, the audit proof disk time (None = one chunk-read interval), and
+    # the serving-p99 inflation budget the bench/tests assert under full
+    # audit+repair load (loaded p99 <= bg_p99_budget * quiescent p99)
+    bg_slot_share: float = 0.5
+    bg_pace_ms: float = 2.0
+    sp_audit_ms_per_proof: float | None = None
+    bg_p99_budget: float = 1.5
+
+    def background(self):
+        """The per-SP BackgroundSpec these knobs describe."""
+        from repro.storage.sp import BackgroundSpec
+
+        return BackgroundSpec(slot_share=self.bg_slot_share,
+                              pace_ms=self.bg_pace_ms)
+
+    def service(self, slots: int | None = None):
+        """A ServiceSpec carrying the background budget + audit disk time."""
+        from repro.storage.sp import ServiceSpec
+
+        return ServiceSpec(slots=slots if slots is not None else self.sp_service_slots,
+                           audit_ms_per_proof=self.sp_audit_ms_per_proof,
+                           background=self.background())
 
     def nic(self):
         from repro.net.backbone import NICSpec

@@ -5,6 +5,13 @@ audit epochs end to end — internal challenges, proof broadcast, peer
 verification, scoreboard publication, epoch close with on-chain challenges,
 audit-the-auditor and slashing — and accounts each SP's *total utility*:
 
+The data-plane half of each epoch runs on the shared event engine: the
+audit challenge→proof→verify flow is a paced background plane
+(:class:`~repro.storage.background.AuditPlane`) spawned on the SAME loop
+as the epoch's paid-read storm, so audit work holds real SP disk slots
+(background class, capped by :class:`~repro.storage.sp.BackgroundSpec`)
+and contends with serving instead of being free.
+
     utility = storage rewards + auditor rewards + evidence rewards
               - slashing - storage costs (+ saved costs for cheaters)
 
@@ -21,12 +28,14 @@ import numpy as np
 from repro.core.audit import AuditParams, Challenge
 from repro.core.contract import ShelbyContract
 from repro.core.placement import SPInfo
+from repro.net.events import EventLoop
 from repro.net.fleet import CacheAffinityPolicy, RPCFleet
 from repro.net.workloads import zipf_hotset
+from repro.storage.background import AuditPlane
 from repro.storage.blob import BlobLayout
 from repro.storage.rpc import RPCNode
 from repro.storage.sdk import ShelbyClient
-from repro.storage.sp import SPBehavior, StorageProvider
+from repro.storage.sp import BackgroundSpec, SPBehavior, ServiceSpec, StorageProvider
 
 
 @dataclasses.dataclass
@@ -47,6 +56,11 @@ class SimResult:
     # another request's in-flight fetch
     reads_shed: int = 0
     reads_coalesced: int = 0
+    # the audit plane on the event loop: challenge→proof→verify tasks that
+    # ran CONCURRENTLY with the paid-read storm, holding auditee disk slots
+    # in the background class (a failed op = no proof, e.g. a dropped chunk)
+    audit_ops: int = 0
+    audit_failures: int = 0
 
     def utility(self, sp: int) -> float:
         return self.utilities[sp]
@@ -67,15 +81,18 @@ def run_sim(
     decode_matmul=None,  # e.g. configs.shelby.resolve_decode_matmul("pallas")
     admission=None,  # storage.rpc.AdmissionSpec: shed past saturation
     single_flight: bool = True,  # collapse concurrent same-chunkset misses
+    background: BackgroundSpec | None = None,  # per-SP audit/repair budget
 ) -> SimResult:
     params = params or AuditParams(p_a=0.5, auditors_per_audit=4, C=50, p_ata=0.3)
     layout = layout or BlobLayout(k=4, m=2, chunkset_bytes_target=64 * 1024)
+    background = background or BackgroundSpec()
     n = len(behaviors)
     contract = ShelbyContract(params)
     sps: dict[int, StorageProvider] = {}
     for i in range(n):
         contract.register_sp(SPInfo(sp_id=i, stake=10_000.0, dc=f"dc{i % 3}"))
-        sps[i] = StorageProvider(i, behaviors.get(i, SPBehavior()))
+        sps[i] = StorageProvider(i, behaviors.get(i, SPBehavior()),
+                                 service=ServiceSpec(background=background))
     rpcs = [
         RPCNode(f"rpc{r}", contract, sps, layout, decode_matmul=decode_matmul,
                 admission=admission, single_flight=single_flight)
@@ -99,6 +116,8 @@ def run_sim(
 
     utilities = {i: 0.0 for i in range(n)}
     reads_shed = 0
+    audit_ops = 0
+    audit_failures = 0
     # storage costs: cheaters with drop_fraction save proportionally
     held = {}
     for meta in contract.blobs.values():
@@ -107,13 +126,35 @@ def run_sim(
 
     last = None
     for epoch in range(epochs):
+        # the audit plane: challenge→proof→verify as paced background tasks
+        # on the event loop — CONCURRENT with the epoch's paid-read storm,
+        # holding auditee disk slots in the background class, instead of the
+        # old zero-cost serial pass
         challenges = contract.internal_challenges(epoch)
-        for ch in challenges:
-            proof = sps[ch.auditee].respond_challenge(ch)
-            for auditor in ch.auditors:
-                if auditor in contract.ejected:
-                    continue
-                sps[auditor].audit_peer(ch, proof, contract)
+        plane = AuditPlane(contract, sps, challenges)
+        if read_requests_per_epoch:
+            # paid Zipf read traffic through the client session, replayed as
+            # a CONCURRENT open-loop Poisson process on the shared event
+            # heap: in-flight requests' hedge timers and SP disk queues
+            # interleave — and now contend with the audit plane.  The client
+            # pays serving RPC nodes on delivery ("reads are paid"); a
+            # dropped request debits nothing.
+            metas = list(contract.blobs.values())
+            reqs = zipf_hotset(
+                metas,
+                clients=["user"],
+                num_requests=read_requests_per_epoch,
+                seed=seed * 1009 + epoch,
+                arrival="poisson",
+            )
+            _, replay = client.replay(reqs, background=plane)
+            reads_shed += replay.shed
+        else:
+            loop = EventLoop()
+            plane.spawn(loop)
+            loop.run()
+        audit_ops += len(plane.records)
+        audit_failures += sum(1 for r in plane.records if not r.ok)
         for i, sp in sps.items():
             if i not in contract.ejected:
                 contract.submit_scoreboard(epoch, sp.scoreboard)
@@ -132,23 +173,6 @@ def run_sim(
             utilities[i] -= stored * storage_cost_per_chunk_epoch
         for sp in sps.values():  # fresh scoreboards next epoch
             sp.scoreboard.bits.clear()
-
-        if read_requests_per_epoch:
-            # paid Zipf read traffic through the client session, replayed as
-            # a CONCURRENT open-loop Poisson process on the shared event
-            # heap: in-flight requests' hedge timers and SP disk queues
-            # interleave.  The client pays serving RPC nodes on delivery
-            # ("reads are paid"); a dropped request debits nothing.
-            metas = list(contract.blobs.values())
-            reqs = zipf_hotset(
-                metas,
-                clients=["user"],
-                num_requests=read_requests_per_epoch,
-                seed=seed * 1009 + epoch,
-                arrival="poisson",
-            )
-            _, replay = client.replay(reqs)
-            reads_shed += replay.shed
 
     # settle the read session: client->RPC channels broadcast their freshest
     # refunds and the RPC->SP channels cascade, so serving income reaches SP
@@ -173,6 +197,8 @@ def run_sim(
         client_read_payments=sum(r.total_paid for r in receipts),
         reads_shed=reads_shed,
         reads_coalesced=fleet.coalesced(),
+        audit_ops=audit_ops,
+        audit_failures=audit_failures,
     )
 
 

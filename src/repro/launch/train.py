@@ -99,7 +99,8 @@ def main(argv=None):
         sps[victim].recover()
         sps[victim].wipe()
         n_rep = len(repair.repair_all())
-        print(f"[driver] repaired {n_rep} chunks (MSR where possible)")
+        print(f"[driver] repaired {n_rep} chunks (MSR where possible)"
+              + (f"; {len(repair.failures)} UNRECOVERABLE" if repair.failures else ""))
         state, rep2 = trainer.run(restored, batches, args.steps - step0, start_step=step0)
         losses = rep1.losses + rep2.losses
     else:

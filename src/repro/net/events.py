@@ -17,7 +17,12 @@ Tasks are plain Python generators that yield *effects*:
   :class:`~repro.net.backbone.Backbone` (NIC + trunk serialization and
   propagation accounted); resumes at the arrival time;
 * ``Acquire(resource, capacity)`` / ``Release(resource)`` — counting
-  semaphore with a FIFO wait queue (SP disk slots, any shared resource);
+  semaphore with a FIFO wait queue (SP disk slots, any shared resource).
+  Acquires carry a *priority class* (0 = foreground) and an optional
+  per-class slot cap: waiters wake in (priority, FIFO) order, and a class
+  at its cap queues even while slots are free — this is how background
+  traffic (audits, repair) shares an SP's disks with paid serving without
+  ever starving it;
 * ``Join(handle)``              — wait for a task spawned with
   :meth:`EventLoop.spawn`; resumes with its return value, or re-raises
   its exception;
@@ -68,17 +73,29 @@ class Acquire:
 
     ``capacity`` sizes the resource the first time its key is seen;
     later acquires of the same key ignore it.
+
+    ``priority`` is the scheduling class (0 = foreground; larger numbers
+    are more deferrable) and ``limit`` caps how many slots THIS class may
+    hold concurrently — a background acquire at its class cap queues even
+    while free slots exist, so paid serving always finds headroom.  Waiters
+    wake in (priority, arrival) order: a queued foreground request is never
+    overtaken by background work.
     """
 
     resource: Any  # hashable key, e.g. ("sp", 3)
     capacity: int = 1
+    priority: int = 0
+    limit: int | None = None  # max concurrent slots for this priority class
 
 
 @dataclasses.dataclass(frozen=True)
 class Release:
-    """Give back one slot; wakes the oldest waiter at the current time."""
+    """Give back one slot; wakes the best eligible waiter at the current
+    time.  ``priority`` must match the class of the paired ``Acquire`` so
+    per-class accounting stays balanced."""
 
     resource: Any
+    priority: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -125,10 +142,17 @@ class TaskHandle:
 
 
 class Resource:
-    """Counting semaphore with a FIFO wait queue and queueing telemetry."""
+    """Counting semaphore with a priority wait queue and queueing telemetry.
+
+    Waiters are ordered by (priority class, arrival seq) — FIFO within a
+    class, foreground (class 0) ahead of background.  A class with a slot
+    cap (``Acquire.limit``) is skipped while at its cap, letting slots sit
+    free for foreground work instead of being soaked up by background.
+    """
 
     __slots__ = ("key", "capacity", "in_use", "waiters", "acquired",
-                 "wait_ms_total", "max_queue")
+                 "wait_ms_total", "max_queue", "in_use_by_class",
+                 "wait_ms_by_class", "acquired_by_class")
 
     def __init__(self, key: Any, capacity: int):
         if capacity < 1:
@@ -136,10 +160,61 @@ class Resource:
         self.key = key
         self.capacity = capacity
         self.in_use = 0
-        self.waiters: deque[tuple[TaskHandle, float]] = deque()
+        # priority class -> FIFO of (handle, enqueue_ms, class_limit); wake
+        # order is class-ascending then FIFO, so a release is O(#classes),
+        # not O(queue depth) — the foreground-only saturation path keeps
+        # its old one-deque cost
+        self.waiters: dict[int, deque[tuple[TaskHandle, float, int | None]]] = {}
         self.acquired = 0
         self.wait_ms_total = 0.0
         self.max_queue = 0
+        self.in_use_by_class: dict[int, int] = {}
+        self.wait_ms_by_class: dict[int, float] = {}
+        self.acquired_by_class: dict[int, int] = {}
+
+    def can_grant(self, priority: int, limit: int | None) -> bool:
+        if self.in_use >= self.capacity:
+            return False
+        if limit is not None and self.in_use_by_class.get(priority, 0) >= limit:
+            return False
+        return True
+
+    def grant(self, priority: int, waited_ms: float = 0.0) -> None:
+        self.in_use += 1
+        self.acquired += 1
+        self.in_use_by_class[priority] = self.in_use_by_class.get(priority, 0) + 1
+        self.acquired_by_class[priority] = self.acquired_by_class.get(priority, 0) + 1
+        if waited_ms:
+            self.wait_ms_total += waited_ms
+            self.wait_ms_by_class[priority] = (
+                self.wait_ms_by_class.get(priority, 0.0) + waited_ms
+            )
+
+    def enqueue(self, priority: int, handle: TaskHandle, t_ms: float,
+                limit: int | None) -> None:
+        self.waiters.setdefault(priority, deque()).append((handle, t_ms, limit))
+        self.max_queue = max(
+            self.max_queue, sum(len(q) for q in self.waiters.values())
+        )
+
+    def pop_eligible(self) -> tuple[int, TaskHandle, float] | None:
+        """Remove and return the first live waiter in (priority class,
+        FIFO) order whose class is under its cap; purge dead entries on
+        the way.  A capped class head blocks its whole class (strict FIFO
+        within a class), never other classes."""
+        for prio in sorted(self.waiters):
+            q = self.waiters[prio]
+            while q:
+                h, t0, limit = q[0]
+                if h.cancelled or h.done:
+                    q.popleft()
+                    continue
+                if (limit is not None
+                        and self.in_use_by_class.get(prio, 0) >= limit):
+                    break  # class at its cap: try the next class
+                q.popleft()
+                return prio, h, t0
+        return None
 
 
 class Channel:
@@ -297,25 +372,21 @@ class EventLoop:
             self._push(arrival, h, ("resume", arrival))
         elif isinstance(effect, Acquire):
             res = self.resource(effect.resource, effect.capacity)
-            if res.in_use < res.capacity:
-                res.in_use += 1
-                res.acquired += 1
+            if res.can_grant(effect.priority, effect.limit):
+                res.grant(effect.priority)
                 self._push(self.now, h, ("resume", None))
             else:
-                res.waiters.append((h, self.now))
-                res.max_queue = max(res.max_queue, len(res.waiters))
+                res.enqueue(effect.priority, h, self.now, effect.limit)
         elif isinstance(effect, Release):
             res = self.resource(effect.resource)
             res.in_use -= 1
-            while res.waiters:
-                w, t0 = res.waiters.popleft()
-                if w.cancelled or w.done:
-                    continue
-                res.in_use += 1
-                res.acquired += 1
-                res.wait_ms_total += self.now - t0
+            held = res.in_use_by_class.get(effect.priority, 0)
+            res.in_use_by_class[effect.priority] = max(0, held - 1)
+            woken = res.pop_eligible()
+            if woken is not None:
+                prio, w, t0 = woken
+                res.grant(prio, waited_ms=self.now - t0)
                 self._push(self.now, w, ("resume", None))
-                break
             self._push(self.now, h, ("resume", None))
         elif isinstance(effect, Join):
             child = effect.handle

@@ -142,7 +142,11 @@ class HedgedScheduler:
                     launch()
                     launched += 1
                 res.hedges += launched
-                if launched and queue:
+                # re-arm whenever candidates remain — INCLUDING when the
+                # overload gate suppressed the launch: a brownout window
+                # must delay hedging, not permanently disable it for this
+                # fetch (the gate is consulted afresh at the next deadline)
+                if queue:
                     timer_h = loop.spawn(timer(deadline), label=f"{label}/deadline")
                 continue
             outstanding -= 1

@@ -24,6 +24,10 @@ The *drivers* push those requests through the shared event engine:
 Both return a :class:`ReplayResult` whose ``digest()`` hashes every
 per-request timing and the backbone's per-link byte counters — the
 determinism gate CI asserts on (two identical runs -> identical digests).
+Both also accept ``background=`` plane(s) (``repro.storage.background``):
+audit and repair tasks spawned on the SAME loop, so background traffic
+contends with the replay and its per-op timings join the digest
+(:class:`BackgroundRecord`, in ``ReplayResult.background``).
 Requests the fleet refuses at admission (typed ``Overloaded`` NACKs) are
 recorded as *shed*, separately from hard failures; ``sweep_open_loop``
 ramps the offered rate and returns the goodput / shed-rate / p99 series
@@ -152,6 +156,27 @@ def zipf_hotset(
 # arrival-process drivers on the shared event engine
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
+class BackgroundRecord:
+    """One background-plane operation (audit or repair) on the shared clock.
+
+    Background traffic rides the same loop, NICs, trunks and SP disk slots
+    as the foreground replay, so these timings are part of the determinism
+    digest: same seed ⇒ same foreground AND background schedule.
+    """
+
+    kind: str  # "audit" | "repair"
+    key: str  # stable id, e.g. "e0/a3/b1/c0/k2"
+    t_ms: float  # task start on the sim clock
+    finish_ms: float
+    ok: bool
+    nbytes: int  # bytes the op moved over the network (0 without a backbone)
+
+    @property
+    def latency_ms(self) -> float:
+        return self.finish_ms - self.t_ms
+
+
+@dataclasses.dataclass(frozen=True)
 class RequestRecord:
     """One request's fate on the shared simulated clock."""
 
@@ -174,6 +199,8 @@ class ReplayResult:
     span_ms: float  # first arrival -> last client-observed finish
     link_bytes: dict  # backbone trunk utilization snapshot after the run
     trace: list[tuple[float, str, str]] | None = None  # loop audit trail
+    # background-plane operations (audits, repairs) that shared the loop
+    background: list[BackgroundRecord] = dataclasses.field(default_factory=list)
 
     @property
     def dropped(self) -> int:
@@ -211,15 +238,38 @@ class ReplayResult:
         lats = self.latencies_ms()
         return float(np.percentile(np.asarray(lats), q)) if lats else 0.0
 
+    # -- background-plane accounting ------------------------------------------------
+    @property
+    def background_ops(self) -> int:
+        return len(self.background)
+
+    @property
+    def background_bytes(self) -> int:
+        return sum(b.nbytes for b in self.background)
+
+    @property
+    def background_failures(self) -> int:
+        return sum(1 for b in self.background if not b.ok)
+
+    def background_percentile(self, q: float) -> float:
+        lats = [b.latency_ms for b in self.background if b.ok]
+        return float(np.percentile(np.asarray(lats), q)) if lats else 0.0
+
     def digest(self) -> str:
-        """Determinism fingerprint: every request's exact timings plus the
-        per-link byte counters.  Two runs of the same workload on a fresh
-        world must produce byte-identical digests."""
+        """Determinism fingerprint: every request's exact timings, every
+        background op's timings, plus the per-link byte counters.  Two runs
+        of the same workload on a fresh world must produce byte-identical
+        digests — including the audit/repair schedule."""
         h = hashlib.sha256()
         for r in self.records:
             h.update(
                 f"{r.index}|{r.t_ms!r}|{r.finish_ms!r}|{r.latency_ms!r}|"
                 f"{r.nbytes}|{r.ok}|{r.client}|{r.blob_id}|{r.shed}\n".encode()
+            )
+        for b in self.background:
+            h.update(
+                f"bg|{b.kind}|{b.key}|{b.t_ms!r}|{b.finish_ms!r}|{b.ok}|"
+                f"{b.nbytes}\n".encode()
             )
         for key in sorted(self.link_bytes, key=str):
             h.update(f"{key}={self.link_bytes[key]}\n".encode())
@@ -306,7 +356,18 @@ def _serve_one(loop, fleet, records, i, req, label, on_served, on_shed=None):
     return sr
 
 
-def _finish_replay(loop, records, network) -> ReplayResult:
+def _planes(background) -> list:
+    """Normalize the ``background`` argument: None, one plane, or a list of
+    planes — anything with ``spawn(loop)`` and a ``records`` list (see
+    ``repro.storage.background``)."""
+    if background is None:
+        return []
+    if hasattr(background, "spawn"):
+        return [background]
+    return list(background)
+
+
+def _finish_replay(loop, records, network, planes=()) -> ReplayResult:
     """Shared result assembly: drop unserved slots, compute the span, and
     snapshot link utilization for the determinism digest."""
     done = [r for r in records if r is not None]
@@ -314,8 +375,9 @@ def _finish_replay(loop, records, network) -> ReplayResult:
         max(r.finish_ms for r in done) - min(r.t_ms for r in done) if done else 0.0
     )
     link = dict(network.link_bytes) if network is not None else {}
+    bg = [rec for p in planes for rec in p.records]
     return ReplayResult(records=done, span_ms=span, link_bytes=link,
-                        trace=loop.trace)
+                        trace=loop.trace, background=bg)
 
 
 def replay_open_loop(
@@ -324,11 +386,17 @@ def replay_open_loop(
     *,
     on_served=None,  # (index, request, ServedRange) -> None, completion order
     on_shed=None,  # (index, request, nack_latency_ms) -> None
+    background=None,  # plane(s) with spawn(loop): audits/repair share the loop
     trace: bool = False,
 ) -> ReplayResult:
     """Open-loop replay: every request is its own task spawned at its
     arrival time on ONE shared loop, so all in-flight requests' hedge
-    timers, recoveries, SP queues and NIC transfers interleave."""
+    timers, recoveries, SP queues and NIC transfers interleave.
+
+    ``background`` plane(s) are spawned on the SAME loop before it runs:
+    audit proofs and repair helper reads contend with the replay for NICs,
+    trunks and SP disk slots, and their records land in
+    ``ReplayResult.background`` (covered by the determinism digest)."""
     loop = EventLoop(network=fleet.network, trace=trace)
     records: list[RequestRecord | None] = [None] * len(requests)
     for i, req in enumerate(requests):
@@ -337,8 +405,11 @@ def replay_open_loop(
                        on_shed),
             at_ms=req.t_ms, label=f"req{i}",
         )
+    planes = _planes(background)
+    for p in planes:
+        p.spawn(loop)
     loop.run()
-    return _finish_replay(loop, records, loop.network)
+    return _finish_replay(loop, records, loop.network, planes)
 
 
 def replay_closed_loop(
@@ -346,6 +417,7 @@ def replay_closed_loop(
     schedules: list[tuple[str, list[tuple[int, int, int]]]],  # (client, ranges)
     *,
     think_ms: float = 0.0,
+    background=None,  # plane(s) with spawn(loop), as in replay_open_loop
     trace: bool = False,
 ) -> ReplayResult:
     """Closed-loop replay: one task per client, each issuing its next
@@ -369,5 +441,8 @@ def replay_closed_loop(
 
     for cname, ranges in schedules:
         loop.spawn(client_task(cname, ranges), at_ms=0.0, label=cname)
+    planes = _planes(background)
+    for p in planes:
+        p.spawn(loop)
     loop.run()
-    return _finish_replay(loop, records, loop.network)
+    return _finish_replay(loop, records, loop.network, planes)

@@ -9,18 +9,42 @@ Detect-and-repair for lost/corrupted chunks:
   Shelby can fall back to the MDS property (any k chunks recover data) even
   if it must temporarily sacrifice repair bandwidth efficiency."
 
+Every MDS helper chunk is verified against its on-chain commitment as it
+arrives — one corrupt helper among the first k no longer poisons the
+decode; the planner simply reads the next candidate (retry with a
+different helper subset).  ``repair_all`` records per-chunk failures in
+``failures`` instead of aborting the remaining repairs on the first raise.
+Detection covers *corrupted-at-rest* data too: ``scan_lost_chunks`` can
+spot-check a sampled fraction of live chunks against their commitments
+(an audit-shaped cost — reads + hashes — so the scan itself shows up as
+background load once it runs on the event loop).
+
 The planner also re-verifies the repaired chunk against its on-chain root
 before re-dispersal, and reports exact helper-bytes-read so the repair
 bandwidth benchmark measures the real data path, not a formula.
+
+**On the event loop** (the background plane): :meth:`repair_chunk_task`
+is the same repair as a generator task — helper reads travel as real
+``Transfer``\\ s over the attached :class:`~repro.net.backbone.Backbone`
+(request out, sub-chunks/chunks back), each helper read holds one of the
+helper SP's disk slots *in the background scheduling class* (capped by the
+SP's :class:`~repro.storage.sp.BackgroundSpec` slot share, woken after any
+queued paid read), and the re-dispersal write ships the rebuilt chunk to
+the new SP and occupies its disk too.  Repair bandwidth therefore shows up
+on NIC/trunk counters and can delay — but never starve — paid serving.
 """
 from __future__ import annotations
 
 import dataclasses
+from collections import deque
 
+import numpy as np
 
 from repro.core import commitments as cm
 from repro.core.contract import ShelbyContract
+from repro.net.events import Acquire, EventLoop, Join, Release, Sleep, Transfer
 from repro.storage.blob import BlobLayout
+from repro.storage.rpc import NACK_BYTES, REQUEST_BYTES
 from repro.storage.sp import StorageProvider
 
 
@@ -37,84 +61,254 @@ class RepairReport:
     helper_bytes_read: int
     new_sp: int
     verified: bool
+    helpers_rejected: int = 0  # helper chunks failing their commitment check
+    sim_ms: float = 0.0  # simulated duration when run as an event-loop task
 
 
 class RepairCoordinator:
-    def __init__(self, contract: ShelbyContract, sps: dict[int, StorageProvider], layout: BlobLayout):
+    """Plans and executes repairs, synchronously or as event-loop tasks.
+
+    ``nodes`` maps sp_id -> backbone node id (e.g. ``{3: "sp3"}``); when
+    given together with a loop whose network is attached, task-based
+    repairs move real bytes from ``coordinator_node``.  ``spot_check_rate``
+    samples that fraction of *live* chunks per scan for commitment
+    verification, catching bit rot that a pure liveness scan misses.
+    """
+
+    def __init__(
+        self,
+        contract: ShelbyContract,
+        sps: dict[int, StorageProvider],
+        layout: BlobLayout,
+        *,
+        spot_check_rate: float = 0.0,
+        seed: int = 0,
+        nodes: dict[int, str] | None = None,
+        coordinator_node: str = "repairer",
+    ):
         self.contract = contract
         self.sps = sps
         self.layout = layout
+        self.nodes = nodes
+        self.coordinator_node = coordinator_node
+        self.spot_check_rate = spot_check_rate
+        self._scan_rng = np.random.default_rng(seed * 6151 + 17)
         self.reports: list[RepairReport] = []
+        # per-run_all failure list (reset each call) + cumulative counter —
+        # a permanently unrecoverable chunk re-appears every scan, so the
+        # list alone would grow duplicates unboundedly
+        self.failures: list[tuple[tuple[int, int, int], str]] = []
+        self.failures_total = 0
+        self.spot_checks = 0  # live chunks sampled for commitment verification
+        self.spot_check_bytes = 0
 
     # -- detection (§2.4 audits / Appendix A "trivial to detect") -----------------
-    def scan_lost_chunks(self) -> list[tuple[int, int, int]]:
+    def scan_lost_chunks(self, *, spot_check_rate: float | None = None
+                         ) -> list[tuple[int, int, int]]:
+        """Missing/crashed chunks, plus — at ``spot_check_rate`` — live
+        chunks whose served bytes fail their on-chain commitment (bit rot
+        or a corrupt SP would otherwise never be scheduled for repair)."""
+        rate = self.spot_check_rate if spot_check_rate is None else spot_check_rate
         lost = []
         for meta in self.contract.blobs.values():
             for (cs, ck), sp_id in meta.placement.items():
                 sp = self.sps.get(sp_id)
                 if sp is None or sp.behavior.crashed or not sp.has_chunk(meta.blob_id, cs, ck):
                     lost.append((meta.blob_id, cs, ck))
+                    continue
+                if rate > 0 and self._scan_rng.random() < rate:
+                    self.spot_checks += 1
+                    resp = sp.serve_chunk(meta.blob_id, cs, ck)
+                    if resp is None:
+                        lost.append((meta.blob_id, cs, ck))
+                        continue
+                    self.spot_check_bytes += resp[0].nbytes
+                    commit, _ = cm.commit_chunk(resp[0])
+                    if commit.root != meta.chunk_roots[(cs, ck)]:
+                        lost.append((meta.blob_id, cs, ck))
         return lost
 
-    # -- repair ---------------------------------------------------------------------
-    def repair_chunk(self, blob_id: int, chunkset: int, chunk: int) -> RepairReport:
-        meta = self.contract.blobs[blob_id]
-        lay = self.layout
-        code = lay.code
-        helpers_alive = {}
-        for ck in range(lay.n):
+    # -- shared repair planning ------------------------------------------------------
+    def _alive_helpers(self, meta, blob_id: int, chunkset: int, chunk: int
+                       ) -> dict[int, StorageProvider]:
+        helpers = {}
+        for ck in range(self.layout.n):
             if ck == chunk:
                 continue
             sp = self.sps.get(meta.placement[(chunkset, ck)])
             if sp is not None and not sp.behavior.crashed and sp.has_chunk(blob_id, chunkset, ck):
-                helpers_alive[ck] = sp
+                helpers[ck] = sp
+        return helpers
 
-        bytes_read = 0
-        if len(helpers_alive) == lay.n - 1:
-            # MSR: every helper ships only the repair-plane sub-chunks
-            ids = code.repair_subchunk_ids(chunk)
-            subs = {}
-            for ck, sp in helpers_alive.items():
-                resp = sp.serve_subchunks(blob_id, chunkset, ck, ids)
-                if resp is None:
-                    raise RepairError("helper vanished mid-repair")
-                subs[ck] = resp[0]
-                bytes_read += resp[0].nbytes
-            repaired = code.repair(chunk, subs)
-            mode = "msr"
-        elif len(helpers_alive) >= lay.k:
-            # MDS fallback: full chunks from any k helpers
-            shards = {}
-            for ck, sp in list(helpers_alive.items())[: lay.k]:
-                resp = sp.serve_chunk(blob_id, chunkset, ck)
-                shards[ck] = resp[0]
-                bytes_read += resp[0].nbytes
-            repaired = code.decode(shards)[chunk]
-            mode = "mds"
-        else:
-            raise RepairError(
-                f"unrecoverable: {len(helpers_alive)} helpers < k={lay.k} "
-                f"for chunk ({blob_id},{chunkset},{chunk})"
-            )
+    def _verify_chunk(self, meta, chunkset: int, ck: int, data) -> bool:
+        commit, _ = cm.commit_chunk(data)
+        return commit.root == meta.chunk_roots[(chunkset, ck)]
 
-        # verify against the on-chain commitment before re-dispersal
-        commit, _ = cm.commit_chunk(repaired)
-        verified = commit.root == meta.chunk_roots[(chunkset, chunk)]
-        if not verified:
-            raise RepairError("repaired chunk fails commitment check")
-
-        # place on a fresh SP (contract randomness) and store
+    def _place(self, meta, blob_id: int, chunkset: int, chunk: int) -> int:
+        """Pick where the rebuilt chunk lives (restore in place when the
+        original SP merely lost it; otherwise contract randomness)."""
         old_sp = meta.placement[(chunkset, chunk)]
         old = self.sps.get(old_sp)
-        if old is not None and not old.behavior.crashed and not old.has_chunk(blob_id, chunkset, chunk):
-            new_sp = old_sp  # same SP lost one chunk: restore in place
-        else:
-            new_sp = self.contract.reassign_chunk(blob_id, chunkset, chunk)
-        self.sps[new_sp].store_chunk(blob_id, chunkset, chunk, repaired)
+        if (old is not None and not old.behavior.crashed
+                and not old.has_chunk(blob_id, chunkset, chunk)):
+            return old_sp  # same SP lost one chunk: restore in place
+        return self.contract.reassign_chunk(blob_id, chunkset, chunk)
 
-        report = RepairReport(blob_id, chunkset, chunk, mode, bytes_read, new_sp, verified)
-        self.reports.append(report)
-        return report
+    # -- synchronous repair ---------------------------------------------------------
+    def repair_chunk(self, blob_id: int, chunkset: int, chunk: int) -> RepairReport:
+        """Synchronous wrapper: run :meth:`repair_chunk_task` on a private
+        event loop — ONE implementation of the MSR-first/MDS-fallback plan.
+        The private loop has no network attached, so no transfers are
+        modelled (byte movement needs a shared loop with a Backbone); the
+        helper-bytes accounting is identical either way."""
+        loop = EventLoop()
+        h = loop.spawn(
+            self.repair_chunk_task(loop, blob_id, chunkset, chunk),
+            label=f"repair/b{blob_id}/c{chunkset}/k{chunk}",
+        )
+        return loop.run_until(h)
 
     def repair_all(self) -> list[RepairReport]:
-        return [self.repair_chunk(*lost) for lost in self.scan_lost_chunks()]
+        """Repair every lost chunk; an unrecoverable chunk is recorded in
+        ``failures`` (this call's list — check it after every sweep) instead
+        of aborting the remaining repairs on the first raise."""
+        reports = []
+        self.failures = []
+        for lost in self.scan_lost_chunks():
+            try:
+                reports.append(self.repair_chunk(*lost))
+            except RepairError as e:
+                self.failures.append((lost, str(e)))
+                self.failures_total += 1
+        return reports
+
+    # -- event-loop repair (the background plane) ------------------------------------
+    def _node_of(self, sp_id: int) -> str | None:
+        return self.nodes.get(sp_id) if self.nodes is not None else None
+
+    def _helper_read_task(self, loop: EventLoop, sp_id: int, ck: int,
+                          blob_id: int, chunkset: int, sub_ids=None):
+        """One background helper read: request over the backbone, a disk
+        slot in the background class (under the SP's slot-share budget),
+        then the payload back over the helper's NIC and the trunks."""
+        sp = self.sps[sp_id]
+        node = self._node_of(sp_id)
+        networked = node is not None and loop.network is not None
+        if networked:
+            yield Transfer(self.coordinator_node, node, REQUEST_BYTES)
+        if sub_ids is not None:
+            resp = sp.serve_subchunks(blob_id, chunkset, ck, sub_ids)
+        else:
+            resp = sp.serve_chunk(blob_id, chunkset, ck)
+        if resp is None:
+            if networked:
+                yield Transfer(node, self.coordinator_node, NACK_BYTES)
+            return None
+        data, _ = resp
+        prio = sp.service.background.priority
+        yield Acquire(("sp", sp_id), sp.service.slots, priority=prio,
+                      limit=sp.bg_slots())
+        yield Sleep(sp.service_ms())
+        yield Release(("sp", sp_id), priority=prio)
+        if networked:
+            yield Transfer(node, self.coordinator_node, data.nbytes)
+        return data
+
+    def repair_chunk_task(self, loop: EventLoop, blob_id: int, chunkset: int,
+                          chunk: int, label: str = "repair"):
+        """Task: the same MSR-first/MDS-fallback repair, with helper reads
+        as concurrent background tasks moving real bytes.  Returns the
+        :class:`RepairReport`; raises :class:`RepairError` when the chunk
+        is unrecoverable (callers — e.g. ``RepairPlane`` — record it)."""
+        meta = self.contract.blobs[blob_id]
+        lay = self.layout
+        code = lay.code
+        t0 = loop.now
+        helpers_alive = self._alive_helpers(meta, blob_id, chunkset, chunk)
+
+        bytes_read = 0
+        rejected = 0
+        repaired = None
+        mode = ""
+        if len(helpers_alive) == lay.n - 1:
+            ids = code.repair_subchunk_ids(chunk)
+            handles = [
+                (ck, loop.spawn(
+                    self._helper_read_task(loop, sp.sp_id, ck, blob_id,
+                                           chunkset, sub_ids=ids),
+                    label=f"{label}/msr{ck}"))
+                for ck, sp in sorted(helpers_alive.items())
+            ]
+            subs: dict[int, object] = {}
+            vanished = False
+            for ck, h in handles:  # harvest every leg before deciding —
+                data = yield Join(h)  # delivered bytes count even when the
+                if data is None:  # MSR plan dies (they crossed the links)
+                    vanished = True
+                else:
+                    subs[ck] = data
+                    bytes_read += data.nbytes
+            if not vanished:
+                candidate = code.repair(chunk, subs)
+                if self._verify_chunk(meta, chunkset, chunk, candidate):
+                    repaired, mode = candidate, "msr"
+
+        if repaired is None:
+            if len(helpers_alive) < lay.k:
+                raise RepairError(
+                    f"unrecoverable: {len(helpers_alive)} helpers < k={lay.k} "
+                    f"for chunk ({blob_id},{chunkset},{chunk})"
+                )
+            # MDS fallback in waves: k concurrent verified reads, replacing
+            # rejected/missing helpers from the remaining candidates
+            remaining = deque(sorted(helpers_alive))
+            shards: dict[int, object] = {}
+            while len(shards) < lay.k and remaining:
+                wave = []
+                while remaining and len(shards) + len(wave) < lay.k:
+                    wave.append(remaining.popleft())
+                handles = [
+                    (ck, loop.spawn(
+                        self._helper_read_task(loop, helpers_alive[ck].sp_id,
+                                               ck, blob_id, chunkset),
+                        label=f"{label}/mds{ck}"))
+                    for ck in wave
+                ]
+                for ck, h in handles:
+                    data = yield Join(h)
+                    if data is None:
+                        continue
+                    bytes_read += data.nbytes
+                    if not self._verify_chunk(meta, chunkset, ck, data):
+                        rejected += 1
+                        continue
+                    shards[ck] = data
+            if len(shards) < lay.k:
+                raise RepairError(
+                    f"unrecoverable: only {len(shards)} verified helpers < "
+                    f"k={lay.k} for chunk ({blob_id},{chunkset},{chunk}) "
+                    f"({rejected} rejected by commitment check)"
+                )
+            repaired, mode = code.decode(shards)[chunk], "mds"
+
+        if not self._verify_chunk(meta, chunkset, chunk, repaired):
+            raise RepairError("repaired chunk fails commitment check")
+        new_sp = self._place(meta, blob_id, chunkset, chunk)
+        # re-dispersal: ship the rebuilt chunk and occupy the new SP's disk
+        # for the write — still background class
+        dst_sp = self.sps[new_sp]
+        dst_node = self._node_of(new_sp)
+        if dst_node is not None and loop.network is not None:
+            yield Transfer(self.coordinator_node, dst_node, int(repaired.nbytes))
+        prio = dst_sp.service.background.priority
+        yield Acquire(("sp", new_sp), dst_sp.service.slots, priority=prio,
+                      limit=dst_sp.bg_slots())
+        yield Sleep(dst_sp.service_ms())
+        yield Release(("sp", new_sp), priority=prio)
+        dst_sp.store_chunk(blob_id, chunkset, chunk, repaired)
+
+        report = RepairReport(blob_id, chunkset, chunk, mode, bytes_read,
+                              new_sp, True, helpers_rejected=rejected,
+                              sim_ms=loop.now - t0)
+        self.reports.append(report)
+        return report

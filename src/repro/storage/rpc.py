@@ -63,6 +63,13 @@ from repro.storage.blob import BlobLayout
 from repro.storage.sp import StorageProvider
 
 
+# modeled RPC wire envelope: one chunk request / one failure NACK.  The
+# single source of truth — the repair and audit planes import these so
+# foreground and background traffic price the same envelope.
+REQUEST_BYTES = 256
+NACK_BYTES = 64
+
+
 class ReadError(Exception):
     pass
 
@@ -186,9 +193,6 @@ class BackboneTransport:
     resources.
     """
 
-    REQUEST_BYTES = 256
-    NACK_BYTES = 64
-
     def __init__(self, sps, backbone, rpc_node: str,
                  sp_node: dict[int, str] | None = None):
         self.sps = sps
@@ -199,18 +203,18 @@ class BackboneTransport:
     def estimate_ms(self, sp_id: int, nbytes: int) -> float:
         bb, sp = self.backbone, self.sp_node[sp_id]
         return (
-            bb.estimate_ms(self.rpc_node, sp, self.REQUEST_BYTES)
+            bb.estimate_ms(self.rpc_node, sp, REQUEST_BYTES)
             + self.sps[sp_id].service_ms()
             + bb.estimate_ms(sp, self.rpc_node, nbytes)
         )
 
     def request_task(self, sp_id: int, blob_id: int, chunkset: int, chunk: int):
         node = self.sp_node[sp_id]
-        yield Transfer(self.rpc_node, node, self.REQUEST_BYTES)
+        yield Transfer(self.rpc_node, node, REQUEST_BYTES)
         sp = self.sps[sp_id]
         resp = sp.serve_chunk(blob_id, chunkset, chunk)
         if resp is None:
-            yield Transfer(node, self.rpc_node, self.NACK_BYTES)
+            yield Transfer(node, self.rpc_node, NACK_BYTES)
             return None
         data, service_ms = resp
         yield Acquire(("sp", sp_id), sp.service.slots)

@@ -205,11 +205,13 @@ class ShelbySession:
         )
         return [self._receipt_for(sr) for sr in served]
 
-    def replay(self, requests, *, trace: bool = False):
+    def replay(self, requests, *, background=None, trace: bool = False):
         """Open-loop replay of a workload's :class:`ReadRequest` list on ONE
         shared event loop: every request is a concurrent task spawned at its
         arrival time, so hedge timers, failure recoveries, SP disk queues
         and NIC transfers of in-flight requests genuinely interleave.
+        ``background`` plane(s) (audits/repair — ``repro.storage.background``)
+        spawn on the same loop and contend with the paid traffic.
 
         Payments stay pay-on-delivery, applied at each request's completion
         time in deterministic event order; dropped requests debit nothing.
@@ -237,7 +239,8 @@ class ShelbySession:
             self.receipts.append(receipts[i])
 
         result = replay_open_loop(self._fleet, requests, on_served=on_served,
-                                  on_shed=on_shed, trace=trace)
+                                  on_shed=on_shed, background=background,
+                                  trace=trace)
         return receipts, result
 
     def read(
@@ -556,10 +559,11 @@ class ShelbyClient:
     ) -> list[ReadReceipt]:
         return self.current_session.get_many(requests, client=client, t_ms=t_ms)
 
-    def replay(self, requests, *, trace: bool = False):
+    def replay(self, requests, *, background=None, trace: bool = False):
         """Concurrent open-loop replay through the implicit session (see
         :meth:`ShelbySession.replay`)."""
-        return self.current_session.replay(requests, trace=trace)
+        return self.current_session.replay(requests, background=background,
+                                           trace=trace)
 
     def open(self, blob_id: int, readahead: int = 0) -> BlobReader:
         return self.current_session.open(blob_id, readahead=readahead)

@@ -35,6 +35,36 @@ class SPBehavior:
     latency_ms: float = 1.0
 
 
+@dataclasses.dataclass(frozen=True)
+class BackgroundSpec:
+    """Per-SP budget for the background planes (§4 audits + §3.3 repair).
+
+    Background work — audit proof generation, repair helper reads,
+    re-dispersal writes — runs on the same event loop and the same disk
+    slots as paid serving, but in a deferrable scheduling class:
+
+    * ``slot_share`` — the max fraction of the SP's ``ServiceSpec.slots``
+      background work may hold concurrently (at least 1 slot, so the
+      planes always make progress).  Free slots beyond the share are left
+      idle for foreground reads rather than soaked up by audits.
+    * ``pace_ms``   — minimum gap between background operations a plane
+      launches (token pacing: audits/repairs trickle instead of bursting).
+    * ``priority``  — event-loop scheduling class (foreground is 0);
+      queued foreground reads always wake ahead of background waiters.
+
+    The net effect is the paper's "auditing without compromising
+    performance": audits and repair brown out before serving does.
+    """
+
+    slot_share: float = 0.5
+    pace_ms: float = 2.0
+    priority: int = 1
+
+    def max_slots(self, slots: int) -> int:
+        """Concurrent disk slots background work may hold on this SP."""
+        return max(1, min(slots, int(round(slots * self.slot_share))))
+
+
 @dataclasses.dataclass
 class ServiceSpec:
     """The SP's service model on the event engine (§2.4 serving).
@@ -46,10 +76,17 @@ class ServiceSpec:
     — a hot SP *queues* excess requests instead of answering every one
     after a flat latency, so tail latency under load comes from queueing
     theory, not from a constant.
+
+    ``audit_ms_per_proof`` is the disk time to pull an audit sample and
+    build its Merkle proof (``None`` = one chunk-read service interval);
+    ``background`` budgets how audit/repair work shares the slots with
+    paid reads (see :class:`BackgroundSpec`).
     """
 
     disk_ms_per_chunk: float | None = None
     slots: int = 4
+    audit_ms_per_proof: float | None = None
+    background: BackgroundSpec = dataclasses.field(default_factory=BackgroundSpec)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -118,6 +155,16 @@ class StorageProvider:
         if self.service.disk_ms_per_chunk is not None:
             return self.service.disk_ms_per_chunk
         return self.behavior.latency_ms
+
+    def audit_service_ms(self) -> float:
+        """Disk time to answer one audit challenge (sample read + proof)."""
+        if self.service.audit_ms_per_proof is not None:
+            return self.service.audit_ms_per_proof
+        return self.service_ms()
+
+    def bg_slots(self) -> int:
+        """Disk slots the background class may hold concurrently here."""
+        return self.service.background.max_slots(self.service.slots)
 
     def serve_chunk(self, blob_id: int, chunkset: int, chunk: int):
         """Returns (chunk_bytes, latency_ms) or None.

@@ -28,7 +28,7 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.sharding import AxisCtx
 from repro.storage.checkpoint import CheckpointManager
-from repro.storage.repair import RepairCoordinator
+from repro.storage.repair import RepairCoordinator, RepairError
 from repro.train import optimizer as opt_mod
 from repro.train.step import make_train_step
 
@@ -107,6 +107,13 @@ class Trainer:
                 self.ckpt.save(step, jax.tree.map(np.asarray, state))
             if self.repair is not None and step % self.ckpt_every == 0:
                 repairs += len(self.repair.repair_all())
+                if self.repair.failures:
+                    # checkpoint durability is the whole point of repairing
+                    # mid-run: an unrecoverable chunk must abort loudly
+                    raise RepairError(
+                        f"{len(self.repair.failures)} chunk(s) unrecoverable "
+                        f"at step {step}: {self.repair.failures[:3]}"
+                    )
             if on_step:
                 on_step(step, state, loss)
         report = TrainReport(

@@ -1,0 +1,371 @@
+"""Background planes on the event loop (ISSUE 5).
+
+Covers the tentpole — audit/repair traffic as paced background tasks that
+contend with paid serving for NICs, trunks and SP disk slots without ever
+starving it — plus the satellite regressions: priority/class-capped
+resource acquisition, the determinism digest over foreground AND
+background timings, the bounded-interference bar, the MDS corrupt-helper
+repair fix, the at-rest-corruption spot-check, and the hedge-timer re-arm
+after an overload-gate brownout.
+"""
+import numpy as np
+import pytest
+
+from repro.core import audit as audit_mod
+from repro.core.contract import ShelbyContract
+from repro.core.placement import SPInfo
+from repro.net.backbone import Backbone
+from repro.net.events import Acquire, EventLoop, Release, Sleep
+from repro.net.fleet import CacheAffinityPolicy, RPCFleet
+from repro.net.scheduler import HedgedScheduler
+from repro.net.workloads import replay_open_loop, zipf_hotset
+from repro.storage.background import AuditPlane, RepairPlane
+from repro.storage.blob import BlobLayout
+from repro.storage.repair import RepairCoordinator
+from repro.storage.rpc import BackboneTransport, RPCNode
+from repro.storage.sdk import ShelbyClient
+from repro.storage.sp import BackgroundSpec, ServiceSpec, StorageProvider
+
+
+# ---------------------------------------------------------------------------
+# priority / class-capped resource acquisition (net/events.py)
+# ---------------------------------------------------------------------------
+def test_bg_class_cap_leaves_free_slots_for_foreground():
+    """A background class at its slot cap queues even while slots are free;
+    a foreground arrival takes the free slot immediately."""
+    loop = EventLoop()
+    got = []
+
+    def bg(name):
+        yield Acquire("disk", 2, priority=1, limit=1)
+        got.append((name, loop.now))
+        yield Sleep(10.0)
+        yield Release("disk", priority=1)
+
+    def fg(name):
+        yield Acquire("disk", 2)
+        got.append((name, loop.now))
+        yield Sleep(2.0)
+        yield Release("disk")
+
+    loop.spawn(bg("bg1"))
+    loop.spawn(bg("bg2"))  # class cap 1: must wait for bg1 despite a free slot
+    loop.spawn(fg("fg"), at_ms=1.0)  # takes the free slot the cap protected
+    loop.run()
+    assert got == [("bg1", 0.0), ("fg", 1.0), ("bg2", 10.0)]
+    res = loop.resource("disk")
+    assert res.acquired_by_class[0] == 1 and res.acquired_by_class[1] == 2
+    assert res.wait_ms_by_class.get(1, 0.0) == pytest.approx(10.0)
+    assert res.wait_ms_by_class.get(0, 0.0) == 0.0
+
+
+def test_queued_foreground_wakes_before_earlier_background_waiter():
+    loop = EventLoop()
+    got = []
+
+    def holder():
+        yield Acquire("disk", 1)
+        yield Sleep(10.0)
+        yield Release("disk")
+
+    def waiter(name, priority):
+        yield Acquire("disk", 1, priority=priority)
+        got.append((name, loop.now))
+        yield Sleep(2.0)
+        yield Release("disk", priority=priority)
+
+    loop.spawn(holder())
+    loop.spawn(waiter("bg", 1), at_ms=0.5)  # queued first …
+    loop.spawn(waiter("fg", 0), at_ms=1.0)  # … but foreground wakes first
+    loop.run()
+    assert got == [("fg", 10.0), ("bg", 12.0)]
+
+
+# ---------------------------------------------------------------------------
+# a small backbone world with repair work and full audit pressure
+# ---------------------------------------------------------------------------
+def _bg_world(*, num_sps=10, service_ms=4.0, slots=2, bg=None, num_rpcs=2,
+              seed=0):
+    layout = BlobLayout(k=4, m=2, chunkset_bytes_target=64 * 1024)
+    contract = ShelbyContract()
+    bb = Backbone.mesh(3, base_latency_ms=4.0, gbps=10.0)
+    bg = bg or BackgroundSpec()
+    sps = {}
+    for i in range(num_sps):
+        dc = f"dc{i % 3}"
+        contract.register_sp(SPInfo(sp_id=i, stake=1000.0, dc=dc, rack=f"r{i % 4}"))
+        sps[i] = StorageProvider(i, service=ServiceSpec(
+            disk_ms_per_chunk=service_ms, slots=slots, background=bg))
+        bb.register_node(f"sp{i}", dc)
+    rpcs = []
+    for r in range(num_rpcs):
+        node = f"rpc{r}"
+        bb.register_node(node, f"dc{r % 3}")
+        rpcs.append(RPCNode(node, contract, sps, layout, cache_chunksets=8,
+                            transport=BackboneTransport(sps, bb, node)))
+    bb.register_node("client", "dc0")
+    bb.register_node("repairer", "dc1")
+    fleet = RPCFleet(rpcs, CacheAffinityPolicy(), backbone=bb)
+    client = ShelbyClient(contract, fleet, deposit=1e9)
+    rng = np.random.default_rng(seed)
+    metas = [client.put(rng.integers(0, 256, 150_000, dtype=np.uint8).tobytes())
+             for _ in range(4)]
+    sps[5].crash()  # AFTER the writes: its chunks become repair work
+    return layout, contract, bb, sps, fleet, client, metas
+
+
+def _bg_planes(layout, contract, sps, *, auditors=3):
+    sp_nodes = {i: f"sp{i}" for i in sps}
+    sp_ids = [s.sp_id for s in contract.active_sps()]
+    challenges = audit_mod.derive_challenges(
+        contract.epoch_seed(0), 0, contract.holdings(), sp_ids,
+        p_a=1.0, auditors_per_audit=auditors,
+    )
+    audits = AuditPlane(contract, sps, challenges, nodes=sp_nodes)
+    rc = RepairCoordinator(contract, sps, layout, nodes=sp_nodes,
+                           coordinator_node="repairer")
+    return audits, RepairPlane(rc)
+
+
+def _reqs(metas, n=60):
+    return zipf_hotset(metas, clients=["client"], num_requests=n,
+                       interarrival_ms=2.0, seed=3, arrival="poisson")
+
+
+def test_replay_with_background_is_deterministic():
+    """Same seed ⇒ same foreground AND background timings (the digest
+    covers both), across fully rebuilt worlds."""
+    digests, bg_counts = [], []
+    for _ in range(2):
+        layout, contract, bb, sps, fleet, client, metas = _bg_world()
+        audits, repairs = _bg_planes(layout, contract, sps)
+        result = replay_open_loop(fleet, _reqs(metas),
+                                  background=[audits, repairs])
+        digests.append(result.digest())
+        bg_counts.append(result.background_ops)
+    assert digests[0] == digests[1]
+    assert bg_counts[0] == bg_counts[1] > 0
+    # both planes actually ran
+    kinds = {"audit", "repair"}
+    assert kinds == {b.kind for b in result.background} & kinds
+
+
+def test_background_interference_bounded_and_bytes_on_links():
+    """Serving p99 under full audits+repair stays within the background
+    budget's bound, the background bytes are visible on the trunk
+    counters, and no foreground read is starved."""
+    layout, contract, bb, sps, fleet, client, metas = _bg_world()
+    quiet = replay_open_loop(fleet, _reqs(metas))
+    assert quiet.background == [] and quiet.dropped == 0
+
+    layout, contract, bb, sps, fleet, client, metas = _bg_world()
+    audits, repairs = _bg_planes(layout, contract, sps)
+    loaded = replay_open_loop(fleet, _reqs(metas),
+                              background=[audits, repairs])
+    assert loaded.dropped == 0  # background never starves paid reads
+    ok_repairs = [b for b in loaded.background if b.kind == "repair" and b.ok]
+    assert ok_repairs and audits.proof_bytes > 0
+    # background traffic shows up on the links …
+    delta = sum(loaded.link_bytes.values()) - sum(quiet.link_bytes.values())
+    assert delta >= 0.5 * (audits.proof_bytes + sum(b.nbytes for b in ok_repairs))
+    # … and the paced background keeps the serving tail within budget
+    assert loaded.percentile(99.0) <= 1.5 * quiet.percentile(99.0) + 5.0
+
+
+def test_background_disabled_is_unchanged():
+    """With no planes attached the replay is byte-identical to passing
+    background=None explicitly — the machinery costs nothing when off."""
+    layout, contract, bb, sps, fleet, client, metas = _bg_world()
+    a = replay_open_loop(fleet, _reqs(metas))
+    layout, contract, bb, sps, fleet, client, metas = _bg_world()
+    b = replay_open_loop(fleet, _reqs(metas), background=None)
+    assert a.digest() == b.digest()
+    assert a.background == [] and b.background == []
+
+
+def test_audit_plane_matches_serial_outcomes():
+    """The plane produces exactly the scoreboard the old serial pass did:
+    honest SPs score 1s, an SP that dropped a chunk fails precisely the
+    challenges on that chunk — concurrency changes timing, not outcomes."""
+    layout, contract, bb, sps, fleet, client, metas = _bg_world()
+    # one SP silently loses one specific chunk (not crashed: it still audits)
+    victim_meta = metas[0]
+    victim_sp = victim_meta.placement[(0, 0)]
+    del sps[victim_sp]._chunks[(victim_meta.blob_id, 0, 0)]
+    sp_ids = [s.sp_id for s in contract.active_sps()]
+    challenges = audit_mod.derive_challenges(
+        contract.epoch_seed(0), 0, contract.holdings(), sp_ids,
+        p_a=1.0, auditors_per_audit=3,
+    )
+    plane = AuditPlane(contract, sps, challenges, nodes={i: f"sp{i}" for i in sps})
+    loop = EventLoop(network=bb)
+    plane.spawn(loop)
+    loop.run()
+    # expected outcome per challenge, computed serially
+    expected_fail = sum(
+        1 for ch in challenges
+        if not sps[ch.auditee].has_chunk(ch.blob_id, ch.chunkset, ch.chunk)
+        or sps[ch.auditee].behavior.crashed
+    ) * 3  # every auditor records the same outcome
+    recorded = [(a, bit) for sp in sps.values()
+                for a, bits in sp.scoreboard.bits.items() for bit in bits]
+    assert len(recorded) == 3 * len(challenges)
+    assert sum(1 for _, bit in recorded if bit == 0) == expected_fail
+    assert len(plane.records) == len(challenges)
+    failed_ops = sum(1 for r in plane.records if not r.ok)
+    assert failed_ops == expected_fail // 3 > 0
+
+
+# ---------------------------------------------------------------------------
+# repair satellites: corrupt helpers, per-chunk failures, spot-check
+# ---------------------------------------------------------------------------
+def _flip(sp, key):
+    sp._chunks[key] = sp._chunks[key].copy()
+    sp._chunks[key].reshape(-1)[0] ^= 0xFF
+
+
+def test_mds_repair_rejects_corrupt_helper_and_retries(cluster, rng):
+    """One at-rest-corrupted helper among the candidates no longer poisons
+    the decode: per-chunk commitment checks reject it and the next helper
+    subset is used (MSR falls back to verified MDS)."""
+    contract, sps, rpc, client = cluster
+    data = rng.integers(0, 256, 200_000, dtype=np.uint8).tobytes()
+    meta = client.put(data)
+    # lose chunk (0,0) surgically; corrupt helper (0,1) at rest
+    del sps[meta.placement[(0, 0)]]._chunks[(meta.blob_id, 0, 0)]
+    _flip(sps[meta.placement[(0, 1)]], (meta.blob_id, 0, 1))
+    rc = RepairCoordinator(contract, sps, rpc.layout)
+    rep = rc.repair_chunk(meta.blob_id, 0, 0)
+    assert rep.mode == "mds" and rep.verified and rep.helpers_rejected == 1
+    rpc._cache.clear()
+    assert client.get(meta.blob_id) == data
+
+
+def test_serve_time_corrupt_helper_is_rejected(rng):
+    """The ISSUE's literal scenario: MDS fallback (a crashed SP rules out
+    MSR) with a corrupt=True helper inside the first k candidates."""
+    layout = BlobLayout(k=2, m=3, chunkset_bytes_target=32 * 1024)
+    contract = ShelbyContract()
+    sps = {}
+    for i in range(8):
+        contract.register_sp(SPInfo(sp_id=i, stake=1000.0, dc=f"dc{i % 3}"))
+        sps[i] = StorageProvider(i)
+    rpc = RPCNode("rpc0", contract, sps, layout)
+    client = ShelbyClient(contract, rpc, deposit=1e9)
+    data = rng.integers(0, 256, 90_000, dtype=np.uint8).tobytes()
+    meta = client.put(data)
+    del sps[meta.placement[(0, 0)]]._chunks[(meta.blob_id, 0, 0)]  # the loss
+    sps[meta.placement[(0, 1)]].crash()  # rules out the MSR pattern
+    sps[meta.placement[(0, 2)]].behavior.corrupt = True  # first-k poisoner
+    rc = RepairCoordinator(contract, sps, layout)
+    rep = rc.repair_chunk(meta.blob_id, 0, 0)
+    assert rep.mode == "mds" and rep.verified and rep.helpers_rejected == 1
+
+
+def test_repair_all_reports_per_chunk_failures(cluster, rng):
+    """An unrecoverable chunk lands in ``failures``; the remaining repairs
+    still run instead of dying on the first raise."""
+    contract, sps, rpc, client = cluster
+    data = rng.integers(0, 256, 200_000, dtype=np.uint8).tobytes()
+    meta = client.put(data)
+    lay = rpc.layout
+    # chunkset 0: the target is lost and 3 of its 5 helpers are corrupted
+    # at rest -> 2 verified helpers < k=4, unrecoverable
+    del sps[meta.placement[(0, 0)]]._chunks[(meta.blob_id, 0, 0)]
+    for ck in (1, 2, 3):
+        _flip(sps[meta.placement[(0, ck)]], (meta.blob_id, 0, ck))
+    # chunkset 1: a plain loss, repairable at MSR bandwidth
+    del sps[meta.placement[(1, 2)]]._chunks[(meta.blob_id, 1, 2)]
+    rc = RepairCoordinator(contract, sps, lay)
+    reports = rc.repair_all()
+    assert [(r.blob_id, r.chunkset, r.chunk) for r in reports] == [(meta.blob_id, 1, 2)]
+    assert len(rc.failures) == 1 and rc.failures[0][0] == (meta.blob_id, 0, 0)
+    assert "unrecoverable" in rc.failures[0][1]
+
+
+def test_scan_spot_check_detects_bitflip_on_live_sp(cluster, rng):
+    """A bit-flipped chunk on a live, responsive SP is invisible to the
+    liveness scan but caught by the sampled commitment spot-check — and
+    repair relocates it."""
+    contract, sps, rpc, client = cluster
+    data = rng.integers(0, 256, 200_000, dtype=np.uint8).tobytes()
+    meta = client.put(data)
+    key = (meta.blob_id, 0, 2)
+    _flip(sps[meta.placement[(0, 2)]], key)
+    rc = RepairCoordinator(contract, sps, rpc.layout)
+    assert rc.scan_lost_chunks() == []  # the old scan misses it entirely
+    lost = rc.scan_lost_chunks(spot_check_rate=1.0)
+    assert lost == [key] and rc.spot_checks > 0
+    reports = rc.repair_all()  # default rate 0: repair the pinned list
+    assert reports == []  # nothing "lost" without the spot check …
+    rep = rc.repair_chunk(*key)  # … but the flagged chunk repairs cleanly
+    assert rep.verified
+    assert rc.scan_lost_chunks(spot_check_rate=1.0) == []
+    rpc._cache.clear()
+    assert client.get(meta.blob_id) == data
+
+
+def test_repair_task_moves_bytes_and_respects_msr_bandwidth():
+    """Event-loop repair reads exactly the MSR helper bytes over the
+    backbone and re-disperses the rebuilt chunk."""
+    layout, contract, bb, sps, fleet, client, metas = _bg_world()
+    rc = RepairCoordinator(contract, sps, layout,
+                           nodes={i: f"sp{i}" for i in sps},
+                           coordinator_node="repairer")
+    lost = rc.scan_lost_chunks()
+    assert lost  # the crashed SP's chunks
+    loop = EventLoop(network=bb)
+    plane = RepairPlane(rc, lost=lost[:3])
+    plane.spawn(loop)
+    loop.run()
+    assert not plane.failures
+    expect = (layout.n - 1) * layout.chunk_bytes // layout.code.q
+    assert all(r.helper_bytes_read == expect and r.mode == "msr"
+               for r in rc.reports)
+    assert all(r.sim_ms > 0 for r in rc.reports)
+    # helper bytes + re-dispersal crossed real trunks
+    assert sum(bb.link_bytes.values()) >= 3 * expect
+
+
+# ---------------------------------------------------------------------------
+# hedge-timer re-arm after overload-gate suppression (net/scheduler.py)
+# ---------------------------------------------------------------------------
+def test_hedge_rearms_after_gate_recovers():
+    """A brownout window suppresses a hedge; once the gate recovers, the
+    NEXT deadline must still fire and hedge — before the fix the timer was
+    never re-armed and hedging stayed dead for the whole fetch."""
+    gate_answers = [False, True, True]  # brownout, then recovered
+
+    def gate():
+        return gate_answers.pop(0) if gate_answers else True
+
+    def issue_task(key, sp_id):
+        # candidate 0 is a 500 ms straggler; every other leg answers in 5 ms
+        yield Sleep(500.0 if key == 0 else 5.0)
+        return f"shard{key}"
+
+    loop = EventLoop()
+    sched = HedgedScheduler(hedge=1, deadline_factor=2.0, min_deadline_ms=10.0)
+    candidates = [(0, 0, 1.0), (1, 1, 2.0), (2, 2, 30.0)]
+    h = loop.spawn(sched.fetch_task(loop, 2, candidates, issue_task,
+                                    hedge_gate=gate))
+    res = loop.run_until(h)
+    assert res.hedges_suppressed >= 1  # the brownout really bit
+    assert res.hedges == 1  # …but the re-armed deadline hedged after recovery
+    assert len(res.shards) == 2 and res.latency_ms < 500.0
+
+
+def test_suppressed_hedge_without_recovery_never_hedges():
+    """The gate staying closed keeps hedges shed (only re-arming changed)."""
+    def issue_task(key, sp_id):
+        yield Sleep(200.0 if key == 0 else 5.0)
+        return f"shard{key}"
+
+    loop = EventLoop()
+    sched = HedgedScheduler(hedge=1, deadline_factor=2.0, min_deadline_ms=10.0)
+    candidates = [(0, 0, 1.0), (1, 1, 2.0), (2, 2, 30.0)]
+    h = loop.spawn(sched.fetch_task(loop, 2, candidates, issue_task,
+                                    hedge_gate=lambda: False))
+    res = loop.run_until(h)
+    assert res.hedges == 0 and res.hedges_suppressed >= 1
+    assert res.latency_ms == pytest.approx(200.0)  # waited out the straggler
