@@ -73,6 +73,15 @@ echo "== background-plane smoke (budget: ${BACKGROUND_BUDGET_S:-180}s) =="
 BACKBONE_SMOKE=1 run_budgeted "${BACKGROUND_BUDGET_S:-180}" "background planes" \
     python -m benchmarks.backbone_serve background
 
+echo "== membership-churn smoke (budget: ${CHURN_BUDGET_S:-240}s) =="
+# epoch-scale churn under a live storm: scripted departures/crashes/joins,
+# boundary reconfigurations, and the re-dispersal backlog draining within
+# the configured budget — asserts zero loss at tolerable churn, bit-exact
+# decode through the SAME fleet, bounded p99 through the change, the
+# monotone measured-durability series, and same-seed digest equality
+BACKBONE_SMOKE=1 run_budgeted "${CHURN_BUDGET_S:-240}" "membership churn" \
+    python -m benchmarks.backbone_serve churn
+
 echo "== streaming smoke: video through BlobReader (budget: ${VIDEO_BUDGET_S:-120}s) =="
 # exercises the session API end to end: open/stream receipts, pay-on-delivery,
 # settlement conservation, and the 40 Mbps 4K bar under failures
@@ -85,7 +94,7 @@ import json, os
 path = os.environ["BENCH_JSON"]
 with open(path) as f:
     doc = json.load(f)
-for section in ("serve_grid", "concurrent_ramp", "background"):
+for section in ("serve_grid", "concurrent_ramp", "background", "churn"):
     assert section in doc, f"{path} missing section {section!r}"
 print(f"{path}: {', '.join(sorted(doc))} OK")
 EOF

@@ -64,6 +64,17 @@ class ShelbyConfig:
     bg_pace_ms: float = 2.0
     sp_audit_ms_per_proof: float | None = None
     bg_p99_budget: float = 1.5
+    # membership plane (epoch-scale churn + reconfiguration): simulated
+    # wall span of one epoch, default per-SP per-epoch churn probabilities,
+    # the drain budget the bench asserts on each boundary's re-dispersal
+    # backlog, and the serving-p99 inflation budget asserted through a
+    # membership change (churned p99 <= churn_p99_budget * quiescent p99)
+    churn_epoch_ms: float = 300.0
+    churn_p_crash: float = 0.0
+    churn_p_leave: float = 0.0
+    churn_joins_per_epoch: int = 0
+    churn_drain_budget_ms: float = 300.0
+    churn_p99_budget: float = 1.8
 
     def background(self):
         """The per-SP BackgroundSpec these knobs describe."""
@@ -79,6 +90,20 @@ class ShelbyConfig:
         return ServiceSpec(slots=slots if slots is not None else self.sp_service_slots,
                            audit_ms_per_proof=self.sp_audit_ms_per_proof,
                            background=self.background())
+
+    def churn(self, *, seed: int = 0, scripted=(), min_active: int | None = None):
+        """The ChurnSpec these knobs describe (plus run-specific scripted
+        events / seed / fleet floor)."""
+        from repro.storage.membership import ChurnSpec
+
+        return ChurnSpec(
+            p_crash=self.churn_p_crash,
+            p_leave=self.churn_p_leave,
+            joins_per_epoch=self.churn_joins_per_epoch,
+            min_active=min_active,
+            seed=seed,
+            scripted=tuple(scripted),
+        )
 
     def nic(self):
         from repro.net.backbone import NICSpec

@@ -165,6 +165,9 @@ class EpochOutcome:
     slashed: dict[int, float]
     onchain_challenges: dict[int, int]
     evidence_rewards: dict[int, float]
+    # on-chain publication fees: gas debited per auditor for landing its
+    # packed scoreboard bytes on the coordination layer (§4.3 cost story)
+    publish_costs: dict[int, float] = dataclasses.field(default_factory=dict)
 
     def utility(self, sp: int) -> float:
         return (
@@ -172,6 +175,7 @@ class EpochOutcome:
             + self.auditor_rewards.get(sp, 0.0)
             + self.evidence_rewards.get(sp, 0.0)
             - self.slashed.get(sp, 0.0)
+            - self.publish_costs.get(sp, 0.0)
         )
 
 
@@ -191,3 +195,8 @@ class AuditParams:
     S_ata: float = 100.0  # slash: failed audit-the-auditor (>= rwd_au/(p_ata*eps)=50)
     r_slash: float = 5.0  # reporter's share for valid evidence
     proof_retention_epochs: int = 2
+    # gas per packed scoreboard byte at publication (§4.3: submissions are
+    # "highly regular" and cheap — a fee small enough that honest auditing
+    # stays profitable, but real enough that the §5.4 inequalities hold NET
+    # of publication; rwd_au=0.01/report vs ~10 packed bytes/report here)
+    gas_per_scoreboard_byte: float = 1e-4

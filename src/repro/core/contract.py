@@ -48,6 +48,17 @@ class BlobMetadata:
     paid_epochs: int = 0
 
 
+@dataclasses.dataclass(frozen=True)
+class Reassignment:
+    """One chunk remapped off a dead SP at an epoch boundary."""
+
+    blob_id: int
+    chunkset: int
+    chunk: int
+    old_sp: int
+    new_sp: int
+
+
 class ShelbyContract:
     """All critical state … recorded and enforced via the Shelby smart
     contract (§1)."""
@@ -64,6 +75,17 @@ class ShelbyContract:
         self.epoch = 0
         self.treasury = 0.0
         self.ejected: set[int] = set()
+        # membership lifecycle (epoch reconfiguration): an SP that ANNOUNCES
+        # departure keeps serving until the next epoch boundary finalizes it
+        # into `departed`; both sets stay keyed in `sps`/`stakes` forever so
+        # history (placement, channels, scores) still resolves
+        self.departing: set[int] = set()
+        self.departed: set[int] = set()
+        # (blob_id, chunkset) -> bump count: incremented on every placement
+        # remap so RPC hot caches can version-check entries cheaply instead
+        # of re-reading the whole placement map
+        self.placement_version: dict[tuple[int, int], int] = defaultdict(int)
+        self.unplaced_chunks = 0  # displaced chunks no live SP could take
         # per-epoch submissions
         self._scoreboards: dict[int, dict[int, Scoreboard]] = defaultdict(dict)
         self.outcomes: dict[int, EpochOutcome] = {}
@@ -79,7 +101,83 @@ class ShelbyContract:
         self.rpcs.add(rpc_id)
 
     def active_sps(self) -> list[SPInfo]:
-        return [s for i, s in sorted(self.sps.items()) if i not in self.ejected]
+        dead = self.ejected | self.departed
+        return [s for i, s in sorted(self.sps.items()) if i not in dead]
+
+    # -- membership lifecycle (epoch reconfiguration) ---------------------------
+    def announce_departure(self, sp_id: int) -> None:
+        """An SP signals intent to leave; it serves until the boundary."""
+        if sp_id not in self.sps:
+            raise KeyError(f"unknown SP {sp_id}")
+        self.departing.add(sp_id)
+
+    def finalize_departure(self, sp_id: int) -> None:
+        """Epoch boundary: the SP is out of the active set for good."""
+        if sp_id not in self.sps:
+            raise KeyError(f"unknown SP {sp_id}")
+        self.departing.discard(sp_id)
+        self.departed.add(sp_id)
+
+    def slash(self, sp_id: int, amount: float) -> bool:
+        """Protocol-violation slashing entry (outside `close_epoch`, e.g. a
+        membership plane ejecting a provably-misbehaving SP); the stake
+        burns to the treasury.  Returns True when the SP was ejected."""
+        burn = min(amount, max(self.stakes.get(sp_id, 0.0), 0.0))
+        self.treasury += burn
+        self._slash(sp_id, amount)
+        return sp_id in self.ejected
+
+    def dead_sps(self) -> set[int]:
+        """SPs whose chunks need re-dispersal: ejected or departed."""
+        return self.ejected | self.departed
+
+    def reconfigure_epoch(
+        self,
+        epoch: int,
+        extra_dead: set[int] | frozenset[int] = frozenset(),
+        skip_chunksets: set[tuple[int, int]] | frozenset = frozenset(),
+    ) -> list[Reassignment]:
+        """Epoch-boundary reassignment: remap every READY placement entry
+        sitting on a dead SP (ejected ∪ departed ∪ `extra_dead`, e.g.
+        crashes detected this epoch) to a surviving/new SP, failure-domain
+        aware and seeded by the epoch randomness.
+
+        Only metadata moves here — the data itself is rebuilt by the repair
+        backlog the caller enqueues from the returned list.  Chunksets in
+        `skip_chunksets` ((blob_id, chunkset) keys, e.g. already counted as
+        lost) are left untouched; a chunk with no eligible candidate stays
+        put and is counted in ``unplaced_chunks``.  Every remap bumps the
+        chunkset's ``placement_version`` so serving caches invalidate.
+        """
+        dead = self.dead_sps() | set(extra_dead)
+        seed = self.epoch_seed(epoch)
+        live = [s for s in self.active_sps() if s.sp_id not in dead]
+        out: list[Reassignment] = []
+        for blob_id in sorted(self.blobs):
+            meta = self.blobs[blob_id]
+            if meta.state is not BlobState.READY:
+                continue
+            for (cs, ck) in sorted(meta.placement):
+                old_sp = meta.placement[(cs, ck)]
+                if old_sp not in dead or (blob_id, cs) in skip_chunksets:
+                    continue
+                holders = {
+                    meta.placement[(cs, c)]
+                    for c in range(meta.n)
+                    if (cs, c) in meta.placement
+                }
+                new_sp = placement_mod.replacement_sp(
+                    seed, blob_id, cs, ck,
+                    [s for s in live if s.sp_id not in holders],
+                    [self.sps[h] for h in holders if h not in dead],
+                )
+                if new_sp is None:
+                    self.unplaced_chunks += 1
+                    continue
+                meta.placement[(cs, ck)] = new_sp
+                self.placement_version[(blob_id, cs)] += 1
+                out.append(Reassignment(blob_id, cs, ck, old_sp, new_sp))
+        return out
 
     # -- randomness --------------------------------------------------------------
     def epoch_seed(self, epoch: int) -> bytes:
@@ -156,6 +254,7 @@ class ShelbyContract:
         rng = placement_mod._rng(self.epoch_seed(self.epoch), b"repair", blob_id, chunkset, chunk)
         new_sp = int(rng.choice([s.sp_id for s in candidates]))
         meta.placement[(chunkset, chunk)] = new_sp
+        self.placement_version[(blob_id, chunkset)] += 1
         return new_sp
 
     # -- catalog (read path never mutates; RPCs mirror this locally, §5.2) --------
@@ -295,6 +394,19 @@ class ShelbyContract:
         for sp, amt in auditor_rwd.items():
             self.balances[sp] += amt
 
+        # 5) scoreboard publication gas (§4.3): landing the packed bit
+        # vectors on chain costs each auditor gas proportional to its
+        # compressed submission size — debited to the treasury, so the
+        # audit economy nets publication out of auditor profit
+        publish_costs: dict[int, float] = {}
+        for auditor, sb in boards.items():
+            _, nbytes = sb.packed()
+            cost = nbytes * p.gas_per_scoreboard_byte
+            if cost > 0:
+                publish_costs[auditor] = cost
+                self.balances[auditor] -= cost
+                self.treasury += cost
+
         outcome = EpochOutcome(
             scores=scores,
             storage_rewards=storage_rwd,
@@ -302,6 +414,7 @@ class ShelbyContract:
             slashed=dict(slashed),
             onchain_challenges=onchain,
             evidence_rewards={},
+            publish_costs=publish_costs,
         )
         self.outcomes[epoch] = outcome
         self.epoch = max(self.epoch, epoch + 1)

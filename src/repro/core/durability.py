@@ -84,3 +84,58 @@ def p_unavailable(
 
 def availability(p: DurabilityParams, **kw) -> float:
     return 1.0 - p_unavailable(p, **kw)
+
+
+# ---------------------------------------------------------------------------
+# churn durability: measured series + analytic per-epoch reference
+# ---------------------------------------------------------------------------
+def p_chunkset_loss_per_epoch(n: int, k: int, p_node_loss: float) -> float:
+    """Analytic per-epoch chunkset-loss probability under iid node churn.
+
+    A chunkset with an (n, k) code dies in an epoch when MORE than n-k of
+    its n holders are lost before repair: the binomial tail
+    ``sum_{j=m+1..n} C(n,j) p^j (1-p)^(n-j)`` with m = n-k.  This is the
+    no-repair bound the *measured* series (a churned simulation with the
+    re-dispersal backlog racing the failures) is compared against.
+    """
+    if not 0.0 <= p_node_loss <= 1.0:
+        raise ValueError("p_node_loss must be a probability")
+    m = n - k
+    return sum(
+        math.comb(n, j) * p_node_loss**j * (1.0 - p_node_loss) ** (n - j)
+        for j in range(m + 1, n + 1)
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class ChurnPoint:
+    """One measured point of the lost-chunksets-vs-churn-rate curve.
+
+    Produced by running a seeded churn process against a real simulated
+    world (``repro.storage.membership.measure_durability``) and *counting*
+    chunksets that fell below k live holders — not by evaluating a formula.
+    ``analytic_no_repair`` carries the matching closed-form tail for the
+    same (n, k, rate) so benchmarks can plot measured vs analytic.
+    """
+
+    churn_rate: float  # per-SP per-epoch loss probability driven
+    epochs: int
+    seeds: int
+    chunksets: int  # total chunksets exposed across all runs
+    lost: int  # chunksets measured below k live holders
+    analytic_no_repair: float = 0.0
+
+    @property
+    def loss_probability(self) -> float:
+        return self.lost / self.chunksets if self.chunksets else 0.0
+
+
+def measured_loss_series(points: list[ChurnPoint]) -> dict:
+    """JSON-shaped summary of a measured churn sweep (benchmark emission)."""
+    return {
+        "churn_rates": [p.churn_rate for p in points],
+        "loss_probability": [p.loss_probability for p in points],
+        "lost": [p.lost for p in points],
+        "chunksets": [p.chunksets for p in points],
+        "analytic_no_repair": [p.analytic_no_repair for p in points],
+    }

@@ -11,6 +11,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import itertools
+from collections import Counter
 
 import numpy as np
 
@@ -88,3 +89,35 @@ def assign_chunkset(
             break
     assert len(picked) == n
     return picked
+
+
+def replacement_sp(
+    seed: bytes,
+    blob_id: int,
+    chunkset: int,
+    chunk: int,
+    candidates: list[SPInfo],
+    holders: list[SPInfo],
+) -> int | None:
+    """Pick ONE replacement SP for a chunk displaced by churn.
+
+    Same failure-domain objective as :func:`assign_chunkset`, applied
+    incrementally: among `candidates` (already filtered to live non-holders)
+    prefer SPs whose datacenter — then rack — holds the fewest of the
+    chunkset's surviving chunks, breaking ties with the contract's seeded
+    randomness so no SP controls where displaced data lands.  Returns
+    ``None`` when no candidate exists (the chunk stays on its dead SP until
+    the fleet grows — the "unplaced" backlog).
+    """
+    if not candidates:
+        return None
+    rng = _rng(seed, b"reassign", blob_id, chunkset, chunk)
+    dc_load = Counter(h.dc for h in holders)
+    rack_load = Counter((h.dc, h.rack) for h in holders)
+    order = [int(i) for i in rng.permutation(len(candidates))]
+    best = min(
+        order,
+        key=lambda i: (dc_load[candidates[i].dc],
+                       rack_load[(candidates[i].dc, candidates[i].rack)]),
+    )
+    return candidates[best].sp_id

@@ -33,6 +33,8 @@ from repro.net.fleet import CacheAffinityPolicy, RPCFleet
 from repro.net.workloads import zipf_hotset
 from repro.storage.background import AuditPlane
 from repro.storage.blob import BlobLayout
+from repro.storage.membership import ChurnSpec, MembershipPlane
+from repro.storage.repair import RepairCoordinator
 from repro.storage.rpc import RPCNode
 from repro.storage.sdk import ShelbyClient
 from repro.storage.sp import BackgroundSpec, SPBehavior, ServiceSpec, StorageProvider
@@ -61,6 +63,14 @@ class SimResult:
     # in the background class (a failed op = no proof, e.g. a dropped chunk)
     audit_ops: int = 0
     audit_failures: int = 0
+    # membership plane (churn != None): epoch-scale joins/departures/crashes,
+    # boundary reconfigurations and the re-dispersal backlog they queued
+    membership_events: int = 0
+    chunksets_lost: int = 0
+    repairs_enqueued: int = 0
+    repairs_completed: int = 0
+    sps_joined: int = 0
+    sps_departed: int = 0
 
     def utility(self, sp: int) -> float:
         return self.utilities[sp]
@@ -82,6 +92,8 @@ def run_sim(
     admission=None,  # storage.rpc.AdmissionSpec: shed past saturation
     single_flight: bool = True,  # collapse concurrent same-chunkset misses
     background: BackgroundSpec | None = None,  # per-SP audit/repair budget
+    churn: ChurnSpec | None = None,  # epoch-scale membership churn plane
+    epoch_ms: float = 250.0,  # simulated wall span of one churned epoch
 ) -> SimResult:
     params = params or AuditParams(p_a=0.5, auditors_per_audit=4, C=50, p_ata=0.3)
     layout = layout or BlobLayout(k=4, m=2, chunkset_bytes_target=64 * 1024)
@@ -124,6 +136,17 @@ def run_sim(
         for sp in meta.placement.values():
             held[sp] = held.get(sp, 0) + 1
 
+    # membership churn: ONE repair coordinator and ONE permanent lost-set
+    # span all epochs (losses must never be double counted across the
+    # per-epoch replay loops); each epoch gets a one-epoch plane slice
+    repair_coord = RepairCoordinator(contract, sps, layout) if churn else None
+    lost_chunksets: set[tuple[int, int]] = set()
+    membership_events = 0
+    repairs_enqueued = 0
+    repairs_completed = 0
+    sps_joined = 0
+    sps_departed = 0
+
     last = None
     for epoch in range(epochs):
         # the audit plane: challenge→proof→verify as paced background tasks
@@ -132,6 +155,17 @@ def run_sim(
         # old zero-cost serial pass
         challenges = contract.internal_challenges(epoch)
         plane = AuditPlane(contract, sps, challenges)
+        mplane = None
+        planes: list = [plane]
+        if churn is not None:
+            mplane = MembershipPlane(
+                contract, sps, layout, churn,
+                repair=repair_coord, fleet=fleet,
+                epochs=1, epoch_ms=epoch_ms, start_epoch=epoch,
+                service_factory=lambda: ServiceSpec(background=background),
+                lost=lost_chunksets,
+            )
+            planes.extend(mplane.planes())
         if read_requests_per_epoch:
             # paid Zipf read traffic through the client session, replayed as
             # a CONCURRENT open-loop Poisson process on the shared event
@@ -147,16 +181,28 @@ def run_sim(
                 seed=seed * 1009 + epoch,
                 arrival="poisson",
             )
-            _, replay = client.replay(reqs, background=plane)
+            _, replay = client.replay(reqs, background=planes)
             reads_shed += replay.shed
         else:
             loop = EventLoop()
-            plane.spawn(loop)
+            for p in planes:
+                p.spawn(loop)
             loop.run()
         audit_ops += len(plane.records)
         audit_failures += sum(1 for r in plane.records if not r.ok)
+        if mplane is not None:
+            membership_events += len(mplane.events)
+            sps_joined += len(mplane.joined)
+            sps_departed += sum(
+                1 for e in mplane.events if e.kind in ("leave", "crash", "slash")
+            )
+            if mplane.repair is not None:
+                repairs_enqueued += mplane.repair.enqueued_total
+                repairs_completed += sum(
+                    1 for r in mplane.repair.records if r.ok
+                )
         for i, sp in sps.items():
-            if i not in contract.ejected:
+            if i not in contract.dead_sps():
                 contract.submit_scoreboard(epoch, sp.scoreboard)
 
         def respond_storage(sp, blob, cs, ck, sidx):
@@ -167,8 +213,8 @@ def run_sim(
             return sps[auditor].reproduce_proof(auditee, pos)
 
         last = contract.close_epoch(epoch, respond_storage, respond_ata)
-        for i in range(n):
-            utilities[i] += last.utility(i)
+        for i in sorted(sps):  # sps may have grown mid-epoch (joiners)
+            utilities[i] = utilities.get(i, 0.0) + last.utility(i)
             stored = sps[i].stored_chunks()
             utilities[i] -= stored * storage_cost_per_chunk_epoch
         for sp in sps.values():  # fresh scoreboards next epoch
@@ -181,7 +227,7 @@ def run_sim(
     receipts = list(session.receipts)
     settlement = client.settle()
     for i, amt in settlement.sp_income.items():
-        utilities[i] += amt
+        utilities[i] = utilities.get(i, 0.0) + amt
 
     slashed_total = {i: 10_000.0 - contract.stakes.get(i, 10_000.0) for i in range(n)}
     p99 = fleet.latency_percentiles(99.0)[0] if fleet.request_latencies_ms else 0.0
@@ -199,6 +245,12 @@ def run_sim(
         reads_coalesced=fleet.coalesced(),
         audit_ops=audit_ops,
         audit_failures=audit_failures,
+        membership_events=membership_events,
+        chunksets_lost=len(lost_chunksets),
+        repairs_enqueued=repairs_enqueued,
+        repairs_completed=repairs_completed,
+        sps_joined=sps_joined,
+        sps_departed=sps_departed,
     )
 
 

@@ -157,14 +157,16 @@ def zipf_hotset(
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
 class BackgroundRecord:
-    """One background-plane operation (audit or repair) on the shared clock.
+    """One background-plane operation (audit, repair, or a membership
+    event — join/leave/crash/slash/reconfigure) on the shared clock.
 
     Background traffic rides the same loop, NICs, trunks and SP disk slots
     as the foreground replay, so these timings are part of the determinism
-    digest: same seed ⇒ same foreground AND background schedule.
+    digest: same seed ⇒ same foreground AND background schedule — including
+    WHO churned and WHAT got remapped.
     """
 
-    kind: str  # "audit" | "repair"
+    kind: str  # "audit" | "repair" | "member"
     key: str  # stable id, e.g. "e0/a3/b1/c0/k2"
     t_ms: float  # task start on the sim clock
     finish_ms: float
@@ -250,6 +252,12 @@ class ReplayResult:
     @property
     def background_failures(self) -> int:
         return sum(1 for b in self.background if not b.ok)
+
+    @property
+    def membership_events(self) -> int:
+        """Membership-plane records (joins/leaves/crashes/slashes plus the
+        per-epoch reconfigure/lost summaries) that rode this replay."""
+        return sum(1 for b in self.background if b.kind == "member")
 
     def background_percentile(self, q: float) -> float:
         lats = [b.latency_ms for b in self.background if b.ok]

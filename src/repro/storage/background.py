@@ -140,16 +140,32 @@ class RepairPlane:
         self.pace_ms = pace_ms
         self.records: list[BackgroundRecord] = []
         self.failures: list[tuple[tuple[int, int, int], str]] = []
+        # re-dispersal backlog accounting (membership plane): how many
+        # repairs were queued over the plane's lifetime, and the live task
+        # handles of the most recent batch (drain-time measurement)
+        self.enqueued_total = 0
+        self.handles: list = []
 
     def spawn(self, loop: EventLoop) -> None:
         lost = self._lost if self._lost is not None else self.rc.scan_lost_chunks()
+        self.enqueue(loop, lost)
+
+    def enqueue(self, loop: EventLoop, lost: list[tuple[int, int, int]]) -> list:
+        """Queue a batch of repairs as paced background tasks starting NOW.
+
+        The membership plane calls this at each epoch boundary with the
+        chunks its reconfiguration displaced — the re-dispersal backlog.
+        Returns the batch's task handles (``finished_ms`` gives the drain
+        time once the loop runs); they are also appended to ``handles``.
+        """
         t = loop.now
+        batch = []
         for blob_id, cs, ck in lost:
-            loop.spawn(
+            batch.append(loop.spawn(
                 self._repair_task(loop, blob_id, cs, ck),
                 at_ms=t,
                 label=f"repair/b{blob_id}/c{cs}/k{ck}",
-            )
+            ))
             pace = self.pace_ms
             if pace is None:
                 sp = self.rc.sps.get(
@@ -157,6 +173,13 @@ class RepairPlane:
                 )
                 pace = sp.service.background.pace_ms if sp is not None else 2.0
             t += pace
+        self.enqueued_total += len(batch)
+        self.handles.extend(batch)
+        return batch
+
+    def backlog(self) -> int:
+        """Enqueued repairs that have not yet finished (either way)."""
+        return self.enqueued_total - len(self.records)
 
     def _repair_task(self, loop: EventLoop, blob_id: int, cs: int, ck: int):
         t0 = loop.now

@@ -129,6 +129,30 @@ class RepairCoordinator:
         return lost
 
     # -- shared repair planning ------------------------------------------------------
+    def live_holders(self, blob_id: int, chunkset: int) -> int:
+        """How many of a chunkset's placed chunks sit on a live SP that
+        actually holds the bytes (the boundary-census liveness count)."""
+        meta = self.contract.blobs[blob_id]
+        alive = 0
+        for ck in range(meta.n):
+            sp = self.sps.get(meta.placement.get((chunkset, ck)))
+            if (sp is not None and not sp.behavior.crashed
+                    and sp.has_chunk(blob_id, chunkset, ck)):
+                alive += 1
+        return alive
+
+    def risk_order(self, items: list[tuple[int, int, int]]
+                   ) -> list[tuple[int, int, int]]:
+        """Most-fragile-first ordering for a repair backlog: chunks of
+        chunksets with the fewest live holders launch first — a chunkset
+        sitting at exactly k is one failure away from data loss, so it
+        must not wait behind comfortable re-dispersals (Appendix A
+        recovery priority).  Ties break on ids, keeping the paced launch
+        schedule — and the determinism digest — reproducible."""
+        return sorted(
+            items, key=lambda it: (self.live_holders(it[0], it[1]),) + it
+        )
+
     def _alive_helpers(self, meta, blob_id: int, chunkset: int, chunk: int
                        ) -> dict[int, StorageProvider]:
         helpers = {}

@@ -208,6 +208,10 @@ class BackboneTransport:
             + bb.estimate_ms(sp, self.rpc_node, nbytes)
         )
 
+    def admit_sp(self, sp_id: int, node: str | None = None) -> None:
+        """A new SP joined mid-run: route its requests to `node`."""
+        self.sp_node[sp_id] = node or f"sp{sp_id}"
+
     def request_task(self, sp_id: int, blob_id: int, chunkset: int, chunk: int):
         node = self.sp_node[sp_id]
         yield Transfer(self.rpc_node, node, REQUEST_BYTES)
@@ -259,8 +263,12 @@ class RPCNode:
         for sp_id in sps:
             self.ledger.open(str(sp_id), sp_deposit)  # channels at join time (§2.3)
         self.serving_income = 0.0  # realized when client sessions settle (§3.2)
-        # hot-cache: key -> (decoded chunkset, expiry on the sim clock or None)
-        self._cache: OrderedDict[tuple[int, int], tuple[np.ndarray, float | None]] = OrderedDict()
+        # hot-cache: key -> (decoded chunkset, expiry on the sim clock or
+        # None, contract placement version at decode time — a remapped
+        # chunkset invalidates on its next lookup)
+        self._cache: OrderedDict[
+            tuple[int, int], tuple[np.ndarray, float | None, int]
+        ] = OrderedDict()
         self._cache_size = cache_chunksets
         self.cache_ttl_ms = cache_ttl_ms
         self.cache_admit_bytes = cache_admit_bytes
@@ -315,6 +323,19 @@ class RPCNode:
             income[sp_id] = server_gets  # one channel per SP
             self.ledger.open(str(sp_id), self._sp_deposit)  # fresh channel
         return income
+
+    def admit_sp(self, sp_id: int, sp: StorageProvider,
+                 node: str | None = None) -> None:
+        """A new SP joined the contract mid-run (membership plane): make it
+        servable from this node — shared SP table entry, a fresh RPC->SP
+        payment channel (channels open at join time, §2.3), and a transport
+        route when the transport keeps one."""
+        self.sps[sp_id] = sp
+        if str(sp_id) not in self.ledger.channels:
+            self.ledger.open(str(sp_id), self._sp_deposit)
+        admit = getattr(self.transport, "admit_sp", None)
+        if admit is not None:
+            admit(sp_id, node)
 
     def _fetch_chunkset_task(
         self, loop: EventLoop, blob_id: int, chunkset: int, label: str = "fetch"
@@ -446,9 +467,16 @@ class RPCNode:
         entry = self._cache.get(key)
         if entry is None:
             return None
-        decoded, expires = entry
+        decoded, expires, version = entry
         if expires is not None and now_ms >= expires:
             del self._cache[key]  # TTL lapsed on the sim clock
+            return None
+        if version != self.contract.placement_version.get(key, 0):
+            # the contract remapped this chunkset since the decode (epoch
+            # reconfiguration / repair placement): the entry may front data
+            # whose holders departed — drop it and re-fetch from the
+            # CURRENT placement so no read is served off a stale member set
+            del self._cache[key]
             return None
         self._cache.move_to_end(key)
         return decoded
@@ -460,7 +488,8 @@ class RPCNode:
         if self.cache_admit_bytes is not None and decoded.nbytes > self.cache_admit_bytes:
             return  # admission: oversized objects would evict the whole hot set
         expires = None if self.cache_ttl_ms is None else now_ms + self.cache_ttl_ms
-        self._cache[key] = (decoded, expires)
+        version = self.contract.placement_version.get(key, 0)
+        self._cache[key] = (decoded, expires, version)
         self._cache.move_to_end(key)
         if len(self._cache) > self._cache_size:
             self._cache.popitem(last=False)

@@ -268,6 +268,13 @@ class StorageProvider:
     def crash(self):
         self.behavior.crashed = True
 
+    def decommission(self):
+        """Graceful exit (announced departure finalized at an epoch
+        boundary): the node powers off — same serving behavior as a crash,
+        but the distinction matters upstream (a departure was re-dispersed
+        proactively; a crash races the repair plane)."""
+        self.behavior.crashed = True
+
     def recover(self):
         self.behavior.crashed = False
 

@@ -1,0 +1,430 @@
+"""Membership plane: churn, reconfiguration, re-dispersal (ISSUE 6).
+
+Covers the tentpole — epoch-scale churn driven on the event loop, contract
+reconfiguration remapping displaced chunks, and the queued re-dispersal
+backlog draining under the background budget — plus the satellites: the
+measured-durability monotonicity property, bit-exact decode after N churned
+epochs, the stale-hot-cache/departed-SP payment regression, fleet expansion
+on join, the scoreboard publication fee, and the analytic binomial tail.
+"""
+import numpy as np
+import pytest
+
+from repro.core import durability
+from repro.core.audit import AuditParams, Challenge
+from repro.core.contract import ShelbyContract
+from repro.core.placement import SPInfo, replacement_sp
+from repro.core.simulation import honest_population, run_sim
+from repro.net.events import EventLoop
+from repro.net.fleet import CacheAffinityPolicy, RPCFleet
+from repro.net.workloads import zipf_hotset
+from repro.storage.blob import BlobLayout
+from repro.storage.membership import ChurnSpec, MembershipPlane, measure_durability
+from repro.storage.repair import RepairCoordinator
+from repro.storage.rpc import ReadError, RPCNode
+from repro.storage.sdk import ShelbyClient
+from repro.storage.sp import ServiceSpec, StorageProvider
+
+
+def _world(*, num_sps=10, num_blobs=2, seed=0, blob_bytes=160_000,
+           service_ms=2.0, num_rpcs=1):
+    layout = BlobLayout(k=4, m=2, chunkset_bytes_target=64 * 1024)
+    contract = ShelbyContract()
+    sps = {}
+    for i in range(num_sps):
+        contract.register_sp(
+            SPInfo(sp_id=i, stake=1000.0, dc=f"dc{i % 3}", rack=f"r{i % 2}")
+        )
+        sps[i] = StorageProvider(i, service=ServiceSpec(
+            disk_ms_per_chunk=service_ms, slots=2))
+    rpcs = [RPCNode(f"rpc{r}", contract, sps, layout, cache_chunksets=8)
+            for r in range(num_rpcs)]
+    fleet = RPCFleet(rpcs, CacheAffinityPolicy())
+    client = ShelbyClient(contract, fleet, deposit=1e9)
+    rng = np.random.default_rng(seed)
+    datas = [rng.integers(0, 256, blob_bytes, dtype=np.uint8).tobytes()
+             for _ in range(num_blobs)]
+    metas = [client.put(d) for d in datas]
+    return layout, contract, sps, fleet, client, metas, datas
+
+
+def _run_plane(contract, sps, layout, spec, *, repair=True, fleet=None,
+               epochs=2, epoch_ms=100.0):
+    rc = RepairCoordinator(contract, sps, layout) if repair else None
+    plane = MembershipPlane(contract, sps, layout, spec, repair=rc,
+                            fleet=fleet, epochs=epochs, epoch_ms=epoch_ms)
+    loop = EventLoop()
+    for p in plane.planes():
+        p.spawn(loop)
+    loop.run()
+    return plane
+
+
+# ---------------------------------------------------------------------------
+# analytic tail + measured durability series (core/durability.py)
+# ---------------------------------------------------------------------------
+def test_analytic_chunkset_loss_tail():
+    # closed form for n=2, k=1: lost only when BOTH chunks fail -> p^2
+    assert durability.p_chunkset_loss_per_epoch(2, 1, 0.3) == pytest.approx(0.09)
+    assert durability.p_chunkset_loss_per_epoch(6, 4, 0.0) == 0.0
+    assert durability.p_chunkset_loss_per_epoch(6, 4, 1.0) == pytest.approx(1.0)
+    ps = [durability.p_chunkset_loss_per_epoch(6, 4, p)
+          for p in (0.0, 0.1, 0.3, 0.5, 0.9)]
+    assert all(a <= b + 1e-15 for a, b in zip(ps, ps[1:]))
+    with pytest.raises(ValueError):
+        durability.p_chunkset_loss_per_epoch(6, 4, 1.5)
+
+
+def test_measured_loss_monotone_in_churn_rate():
+    """Per-seed coupling: a higher crash rate fails a superset of SPs, so
+    the MEASURED loss probability is monotone in the churn rate."""
+    pts = measure_durability((0.0, 0.2, 0.4, 0.6), seeds=(0, 1, 2),
+                             epochs=2, repair=False)
+    probs = [p.loss_probability for p in pts]
+    assert probs[0] == 0.0
+    assert probs[-1] > 0.0
+    assert all(a <= b + 1e-12 for a, b in zip(probs, probs[1:])), probs
+    series = durability.measured_loss_series(pts)
+    assert series["churn_rates"] == [0.0, 0.2, 0.4, 0.6]
+    assert series["loss_probability"] == probs
+
+
+def test_repair_never_hurts_durability():
+    rates = (0.2, 0.35, 0.5)
+    no_rep = measure_durability(rates, seeds=(0, 1), epochs=2, repair=False)
+    rep = measure_durability(rates, seeds=(0, 1), epochs=2, repair=True)
+    for a, b in zip(rep, no_rep):
+        assert a.loss_probability <= b.loss_probability + 1e-12
+
+
+# ---------------------------------------------------------------------------
+# contract reconfiguration (core/contract.py + core/placement.py)
+# ---------------------------------------------------------------------------
+def test_replacement_sp_prefers_unused_failure_domains():
+    holders = [SPInfo(sp_id=i, stake=1.0, dc="dc0", rack=f"r{i}")
+               for i in range(4)]
+    candidates = [
+        SPInfo(sp_id=10, stake=1.0, dc="dc0", rack="r9"),  # loaded dc
+        SPInfo(sp_id=11, stake=1.0, dc="dc1", rack="r0"),  # empty dc
+    ]
+    for ck in range(8):  # any rng draw: the empty dc must win
+        assert replacement_sp(b"s", 0, 0, ck, candidates, holders) == 11
+    assert replacement_sp(b"s", 0, 0, 0, [], holders) is None
+
+
+def test_reconfigure_remaps_departed_sps_and_bumps_versions():
+    layout, contract, sps, fleet, client, metas, _ = _world()
+    victim = next(iter(contract.blobs[metas[0].blob_id].placement.values()))
+    contract.announce_departure(victim)
+    assert victim in contract.departing
+    contract.finalize_departure(victim)
+    assert victim in contract.dead_sps()
+    assert all(s.sp_id != victim for s in contract.active_sps())
+
+    displaced = {
+        (b, cs, ck)
+        for b, meta in contract.blobs.items()
+        for (cs, ck), sp in meta.placement.items() if sp == victim
+    }
+    assert displaced
+    v0 = dict(contract.placement_version)
+    moves = contract.reconfigure_epoch(0)
+    assert {(m.blob_id, m.chunkset, m.chunk) for m in moves} == displaced
+    for m in moves:
+        assert m.old_sp == victim
+        holders = {
+            sp for (cs, _), sp in
+            contract.blobs[m.blob_id].placement.items() if cs == m.chunkset
+        }
+        assert m.new_sp != victim and m.new_sp in holders  # now placed there
+        assert contract.blobs[m.blob_id].placement[(m.chunkset, m.chunk)] == m.new_sp
+        key = (m.blob_id, m.chunkset)
+        assert contract.placement_version[key] > v0.get(key, 0)
+    # nothing anywhere still points at the departed SP
+    for meta in contract.blobs.values():
+        assert victim not in set(meta.placement.values())
+    # each chunkset still spreads over distinct SPs
+    for meta in contract.blobs.values():
+        for cs in range(meta.num_chunksets):
+            owners = [sp for (c, _), sp in meta.placement.items() if c == cs]
+            assert len(set(owners)) == len(owners)
+
+
+def test_slash_burns_stake_and_ejects():
+    _, contract, sps, _, _, _, _ = _world()
+    treasury0 = contract.treasury
+    stake = contract.stakes[3]
+    assert contract.slash(3, stake + 1.0)  # full-stake slash ejects
+    assert 3 in contract.ejected and 3 in contract.dead_sps()
+    assert contract.treasury == pytest.approx(treasury0 + stake)
+
+
+# ---------------------------------------------------------------------------
+# the membership plane end to end (storage/membership.py)
+# ---------------------------------------------------------------------------
+def test_backlog_drains_and_heals_after_departure():
+    layout, contract, sps, fleet, client, metas, datas = _world()
+    plane = _run_plane(
+        contract, sps, layout,
+        ChurnSpec(scripted=((0, "announce", 2, 0.3), (0, "crash", 5, 0.5))),
+        epochs=1,
+    )
+    assert plane.lost_chunksets == 0
+    assert {2, 5} <= contract.dead_sps()
+    assert plane.repair.enqueued_total > 0
+    assert plane.repair.backlog() == 0 and not plane.repair.failures
+    # healed: every placement entry is a live SP actually holding its chunk
+    for blob_id, meta in contract.blobs.items():
+        for (cs, ck), sp_id in meta.placement.items():
+            assert sp_id not in contract.dead_sps()
+            assert sps[sp_id].has_chunk(blob_id, cs, ck)
+    # the drain was measured on the simulated clock
+    st = plane.epoch_stats[0]
+    assert st.enqueued == plane.repair.enqueued_total
+    assert st.drain_ms() > 0.0
+    # graceful leaver was decommissioned only AFTER the boundary
+    assert sps[2].behavior.crashed
+    leave = [e for e in plane.events if e.kind == "leave"]
+    assert leave and leave[0].t_ms == pytest.approx(100.0)
+
+
+def test_backlog_enqueues_most_fragile_chunksets_first():
+    """Re-dispersal drains in recovery-priority order: a chunkset sitting
+    closer to k live holders launches before a comfortable one."""
+    layout, contract, sps, fleet, client, metas, _ = _world(num_blobs=1)
+    b0 = metas[0].blob_id
+    meta = contract.blobs[b0]
+    assert meta.num_chunksets >= 2
+    rc = RepairCoordinator(contract, sps, layout)
+    full = rc.live_holders(b0, 0)
+    assert full == meta.n
+    # degrade chunkset 1 harder than chunkset 0 by dropping stored bytes
+    sps[meta.placement[(0, 0)]]._chunks.pop((b0, 0, 0))
+    for ck in range(3):
+        sps[meta.placement[(1, ck)]]._chunks.pop((b0, 1, ck))
+    assert rc.live_holders(b0, 0) == meta.n - 1
+    assert rc.live_holders(b0, 1) == meta.n - 3
+    items = [(b0, 0, 0), (b0, 1, 0), (b0, 1, 1), (b0, 1, 2)]
+    ordered = rc.risk_order(list(reversed(items)))
+    # all of fragile chunkset 1 first (ties break on chunk id), then cs 0
+    assert ordered == [(b0, 1, 0), (b0, 1, 1), (b0, 1, 2), (b0, 0, 0)]
+
+
+def test_join_expands_contract_and_fleet():
+    layout, contract, sps, fleet, client, metas, _ = _world(num_sps=8)
+    plane = _run_plane(contract, sps, layout,
+                       ChurnSpec(joins_per_epoch=2), fleet=fleet, epochs=1)
+    assert len(plane.joined) == 2
+    for sp_id in plane.joined:
+        assert sp_id in contract.sps and sp_id in sps
+        for rpc in fleet.rpcs:
+            assert sp_id in rpc.sps
+            assert str(sp_id) in rpc.ledger.channels  # can be paid
+    # a subsequent write can place onto the expanded fleet
+    data = np.random.default_rng(9).integers(
+        0, 256, 160_000, dtype=np.uint8).tobytes()
+    meta = client.put(data)
+    assert client.get(meta.blob_id) == data
+
+
+def test_min_active_floor_caps_removals():
+    layout, contract, sps, fleet, client, metas, _ = _world()
+    plane = _run_plane(contract, sps, layout,
+                       ChurnSpec(p_crash=1.0, min_active=7, seed=1), epochs=3)
+    alive = [i for i in sps if not sps[i].behavior.crashed]
+    assert len(alive) == 7  # p_crash=1 would kill everyone without the floor
+    assert plane.lost_chunksets == 0  # 3 removals < m per epoch, repaired
+
+
+def test_nepoch_tolerable_churn_decodes_bit_exact():
+    for seed in (0, 1):
+        layout, contract, sps, fleet, client, metas, datas = _world(seed=seed)
+        plane = _run_plane(contract, sps, layout,
+                           ChurnSpec(p_crash=0.08, seed=seed, min_active=6),
+                           epochs=3)
+        assert plane.lost_chunksets == 0
+        for meta, data in zip(metas, datas):
+            assert client.get(meta.blob_id) == data, f"seed={seed}"
+
+
+def test_heavy_churn_losses_match_census_and_raise_on_read():
+    lost_total = 0
+    for seed in (0, 1, 2):
+        layout, contract, sps, fleet, client, metas, datas = _world(seed=seed)
+        plane = _run_plane(contract, sps, layout,
+                           ChurnSpec(p_crash=0.45, seed=seed), epochs=3)
+        lost_total += plane.lost_chunksets
+        for meta, data in zip(metas, datas):
+            csb = layout.chunkset_bytes
+            for cs in range(meta.num_chunksets):
+                lo = cs * csb
+                hi = min(meta.size_bytes, lo + csb)
+                if (meta.blob_id, cs) in plane.lost:
+                    with pytest.raises(ReadError):
+                        client.get(meta.blob_id, lo, hi - lo)
+                else:  # surviving chunksets decode bit-exact mid-carnage
+                    assert client.get(meta.blob_id, lo, hi - lo) == data[lo:hi]
+    assert lost_total > 0  # beyond the redundancy budget: losses measured
+
+
+def test_churn_events_ride_the_determinism_digest():
+    def one_run():
+        layout, contract, sps, fleet, client, metas, _ = _world(num_rpcs=2)
+        rc = RepairCoordinator(contract, sps, layout)
+        plane = MembershipPlane(
+            contract, sps, layout,
+            ChurnSpec(p_crash=0.1, p_leave=0.1, joins_per_epoch=1, seed=4),
+            repair=rc, fleet=fleet, epochs=2, epoch_ms=60.0,
+        )
+        reqs = zipf_hotset(metas, clients=["u"], num_requests=40,
+                           interarrival_ms=3.0, seed=8, arrival="poisson")
+        with client.session() as session:
+            _, result = session.replay(reqs, background=plane.planes())
+        return plane, result
+
+    pa, ra = one_run()
+    pb, rb = one_run()
+    assert ra.membership_events > 0
+    assert ra.digest() == rb.digest()
+    assert [(e.kind, e.epoch, e.sp_id) for e in pa.events] == \
+        [(e.kind, e.epoch, e.sp_id) for e in pb.events]
+    # a DIFFERENT churn seed must change the digest (events are hashed)
+    def other():
+        layout, contract, sps, fleet, client, metas, _ = _world(num_rpcs=2)
+        rc = RepairCoordinator(contract, sps, layout)
+        plane = MembershipPlane(
+            contract, sps, layout, ChurnSpec(p_crash=0.1, seed=5),
+            repair=rc, fleet=fleet, epochs=2, epoch_ms=60.0,
+        )
+        reqs = zipf_hotset(metas, clients=["u"], num_requests=40,
+                           interarrival_ms=3.0, seed=8, arrival="poisson")
+        with client.session() as session:
+            _, result = session.replay(reqs, background=plane.planes())
+        return result
+
+    assert other().digest() != ra.digest()
+
+
+# ---------------------------------------------------------------------------
+# satellite: stale hot cache + departed SPs are never paid (storage/rpc.py)
+# ---------------------------------------------------------------------------
+def test_post_reassignment_read_refetches_and_never_pays_departed_sp():
+    layout, contract, sps, fleet, client, metas, datas = _world(num_blobs=1)
+    meta, data = metas[0], datas[0]
+    assert client.get(meta.blob_id) == data  # warms every RPC hot cache
+
+    victim = contract.blobs[meta.blob_id].placement[(0, 0)]
+    contract.announce_departure(victim)
+    contract.finalize_departure(victim)
+    moves = contract.reconfigure_epoch(0)
+    assert moves  # placement changed -> cached decodes are now stale
+    rc = RepairCoordinator(contract, sps, layout)
+    rc.repair_all()
+    assert not rc.failures
+    sps[victim].decommission()
+
+    before = {i: sp.earned_reads for i, sp in sps.items()}
+    assert client.get(meta.blob_id) == data
+    # the version check evicted the stale entries: the read REFETCHED
+    # (someone alive was paid) and the departed SP earned nothing
+    assert sps[victim].earned_reads == before[victim]
+    paid_delta = sum(sp.earned_reads - before[i] for i, sp in sps.items())
+    assert paid_delta > 0
+
+
+def test_cache_version_check_only_invalidates_remapped_chunksets():
+    layout, contract, sps, fleet, client, metas, datas = _world(num_blobs=2)
+    assert client.get(metas[0].blob_id) == datas[0]
+    assert client.get(metas[1].blob_id) == datas[1]
+    stats = fleet.rpcs[0].stats
+    hits0, fetches0 = stats.cache_hits, stats.chunkset_fetches
+    # surgically remap ONE chunkset of blob 0 (bumps only its version)
+    b0 = metas[0].blob_id
+    contract.reassign_chunk(b0, 0, 0)
+    RepairCoordinator(contract, sps, layout).repair_all()
+    # untouched chunksets still serve from the hot cache …
+    assert client.get(metas[1].blob_id) == datas[1]
+    assert stats.cache_hits > hits0
+    assert stats.chunkset_fetches == fetches0
+    # … while the remapped chunkset's stale entry was evicted: refetch
+    csb = layout.chunkset_bytes
+    assert client.get(b0, 0, csb) == datas[0][:csb]
+    assert stats.chunkset_fetches == fetches0 + 1
+
+
+# ---------------------------------------------------------------------------
+# satellite: scoreboard publication gas (core/audit.py + contract.close_epoch)
+# ---------------------------------------------------------------------------
+def test_scoreboard_publication_fee_debits_auditors():
+    gas = 1e-3
+    params = AuditParams(p_a=1.0, auditors_per_audit=3, C=10,
+                         gas_per_scoreboard_byte=gas)
+    layout, contract_, sps, fleet, client, metas, _ = _world()
+    contract = ShelbyContract(params)
+    # rebuild the world against the fee-carrying contract
+    sps = {}
+    for i in range(8):
+        contract.register_sp(SPInfo(sp_id=i, stake=1000.0, dc=f"dc{i % 3}"))
+        sps[i] = StorageProvider(i)
+    writer = RPCNode("w", contract, sps, layout)
+    wclient = ShelbyClient(contract, writer, deposit=1e9)
+    rng = np.random.default_rng(0)
+    wclient.put(rng.integers(0, 256, 160_000, dtype=np.uint8).tobytes())
+
+    for ch in contract.internal_challenges(0):
+        proof = sps[ch.auditee].respond_challenge(ch)
+        for a in ch.auditors:
+            sps[a].audit_peer(ch, proof, contract)
+    for i, sp in sps.items():
+        contract.submit_scoreboard(0, sp.scoreboard)
+    expected = {
+        i: sp.scoreboard.packed()[1] * gas
+        for i, sp in sps.items() if sp.scoreboard.bits
+    }
+    bal0 = {i: contract.balances[i] for i in sps}
+    treasury0 = contract.treasury
+
+    def respond_storage(sp, blob, cs, ck, sidx):
+        pr = sps[sp].respond_challenge(Challenge(0, sp, blob, cs, ck, sidx, ()))
+        return (pr.sample, pr.proof) if pr else None
+
+    out = contract.close_epoch(
+        0, respond_storage,
+        lambda auditor, auditee, pos: sps[auditor].reproduce_proof(auditee, pos),
+    )
+    assert out.publish_costs and out.publish_costs == pytest.approx(expected)
+    for i, cost in out.publish_costs.items():
+        credited = (out.storage_rewards.get(i, 0.0)
+                    + out.auditor_rewards.get(i, 0.0))
+        assert contract.balances[i] == pytest.approx(bal0[i] + credited - cost)
+        assert out.utility(i) == pytest.approx(
+            credited - out.slashed.get(i, 0.0) - cost)
+    assert contract.treasury == pytest.approx(
+        treasury0 + sum(out.publish_costs.values()))
+
+
+# ---------------------------------------------------------------------------
+# run_sim integration (core/simulation.py)
+# ---------------------------------------------------------------------------
+def test_run_sim_with_churn_accounts_membership():
+    res = run_sim(
+        honest_population(10), epochs=3, num_blobs=3, blob_bytes=100_000,
+        read_requests_per_epoch=30,
+        churn=ChurnSpec(p_crash=0.05, p_leave=0.05, joins_per_epoch=1,
+                        seed=3, min_active=6),
+    )
+    assert res.membership_events > 0
+    assert res.sps_joined == 3  # one per epoch
+    assert res.sps_departed > 0
+    assert res.chunksets_lost == 0  # floor keeps churn tolerable
+    assert res.repairs_enqueued > 0
+    assert res.repairs_completed == res.repairs_enqueued
+    # joiners carry utility entries (stake/levies accounted per epoch)
+    assert all(i in res.utilities for i in range(10))
+
+
+def test_run_sim_without_churn_is_quiet():
+    res = run_sim(honest_population(6), epochs=2, num_blobs=2)
+    assert res.membership_events == 0
+    assert res.sps_joined == res.sps_departed == 0
+    assert res.chunksets_lost == 0 and res.repairs_enqueued == 0
