@@ -36,12 +36,14 @@ from repro.net.fleet import (
 )
 from repro.net.workloads import (
     analytics_scan,
+    das_storm,
     training_epoch,
     video_streaming,
     zipf_hotset,
 )
 from repro.core import durability
 from repro.storage.background import AuditPlane, RepairPlane
+from repro.storage.das import DASSpec, extend_and_disperse_many, measure_detection
 from repro.storage.blob import BlobLayout
 from repro.storage.membership import ChurnSpec, MembershipPlane, measure_durability
 from repro.storage.repair import RepairCoordinator
@@ -615,11 +617,232 @@ def run_churn():
     })
 
 
+def run_das():
+    """The proof-carrying light-client read regime (§2.3's missing corner):
+    millions of tiny random reads instead of few large streams.
+
+    Three verifiable claims, asserted:
+
+    * **Detection math.** Over clean mini-worlds with seeded exact-count
+      withholding adversaries (including a zero-withholding control), the
+      measured per-epoch detection rate matches ``1-(1-q)^s`` within
+      Monte-Carlo tolerance for every (fraction, seed) cell — the formula
+      is exact because coordinates are drawn with replacement and the
+      adversary withholds an exact share count.
+    * **Sampling beats auditing on bytes.** A withholding SP retains the
+      data, so chunk-possession audits are structurally blind; the mean
+      wire bytes a sampler spends until its first detection stay below
+      ONE full-chunk audit read.
+    * **Cache steering.** A cache-hostile uniform DAS storm rides the
+      shared event engine CONCURRENTLY with the Zipf streaming workload.
+      With the ``cache_bypass`` hint (the default) the streaming fleet
+      cache hit rate is untouched and streaming p99 stays inside
+      ``CONFIG.das_p99_budget``; a counterfactual storm that ignores the
+      hint pollutes the LRU and measurably drops the hit rate.  Two
+      same-seed combined runs produce identical determinism digests
+      (sample records ride the digest like reads).
+
+    The storm runs over the shared adversity world — shares dispersed
+    before the post-write straggler/crash, so samples landing on the
+    crashed SP surface as detections (a crashed holder IS unavailable).
+    """
+    spec = DASSpec(k=CONFIG.das_k, share_bytes=CONFIG.das_share_bytes,
+                   samples_per_epoch=CONFIG.das_samples_per_epoch,
+                   proof_bytes_per_share=CONFIG.das_proof_bytes_per_share)
+
+    # -- (a) measured detection vs the analytic curve ------------------------
+    fractions = (0.0, 0.05, 0.15, 0.30)
+    seeds = (0, 1, 2)
+    rounds, num_blobs = (8, 8) if SMOKE else (12, 12)
+    tol = 0.20 if SMOKE else 0.15  # ~3.5 sigma of a 64/144-trial Bernoulli mean
+    t0 = time.perf_counter()
+    points = measure_detection(fractions, seeds, spec=spec,
+                               num_blobs=num_blobs, rounds=rounds)
+    wall_det = time.perf_counter() - t0
+    for pt in points:
+        print(f"# das q={pt.q_effective:.3f} s={pt.samples} "
+              f"measured={pt.measured:.3f} analytic={pt.analytic:.3f} "
+              f"({pt.detected}/{pt.trials})")
+        assert abs(pt.measured - pt.analytic) <= tol, (
+            f"detection off the analytic curve: q={pt.q_effective:.3f} "
+            f"measured={pt.measured:.3f} vs {pt.analytic:.3f} (tol {tol})"
+        )
+        if pt.q_effective == 0.0:
+            assert pt.detected == 0, "false positive with nothing withheld"
+
+    # -- (b) a withholding SP costs fewer bytes to catch than one audit ------
+    layout = BlobLayout(k=4, m=2, chunkset_bytes_target=64 * 1024)
+    worst = [pt for pt in points if pt.fraction == max(fractions) and pt.detected]
+    assert worst, "no detections at the highest withholding fraction"
+    detect_bytes = [pt.mean_samples_to_detect * pt.mean_sample_bytes for pt in worst]
+    mean_detect_bytes = sum(detect_bytes) / len(detect_bytes)
+    assert mean_detect_bytes < layout.chunk_bytes, (
+        f"sampling costlier than auditing: {mean_detect_bytes:.0f}B to detect "
+        f"vs {layout.chunk_bytes}B full-chunk audit read"
+    )
+
+    # -- (c) the concurrent storm: cache steering + tail + determinism -------
+    nic = CONFIG.nic()
+    layout, contract, bb, sps, metas, datas = _world(nic=nic, sp_slots=2)
+    sps[1].recover()  # shares disperse BEFORE the post-write adversity,
+    records = extend_and_disperse_many(  # exactly like the blobs themselves
+        contract, sps, [(m.blob_id, d) for m, d in zip(metas, datas)], spec,
+        matmul=resolve_decode_matmul(CONFIG.decode_matmul),
+    )
+    sps[1].crash()
+    assert all(r.proof_bytes > 0 for r in records)
+    num_fg = 80 if SMOKE else 300
+    num_das = 120 if SMOKE else 400
+    clients = ["client0", "client1", "client2"]
+
+    def foreground():
+        return zipf_hotset(metas, clients=clients, num_requests=num_fg,
+                           interarrival_ms=1000.0 / 400.0, seed=19,
+                           arrival="poisson")
+
+    def storm(cache_bypass=True):
+        return das_storm(records, clients=clients, num_requests=num_das,
+                         interarrival_ms=0.5, seed=17,
+                         cache_bypass=cache_bypass)
+
+    def one_run(reqs, label):
+        fleet = _fresh_fleet(layout, contract, bb, sps, CacheAffinityPolicy(),
+                             nic=nic, cache_chunksets=8)
+        reader = ShelbyClient(contract, fleet, deposit=1e9, das=spec)
+        t0 = time.perf_counter()
+        with reader.session() as session:
+            _, result = session.replay(reqs)
+        settlement = session.settlement
+        # pay-per-sample rides the same conservation check as paid reads
+        assert abs(settlement.total_node_income
+                   - sum(r.total_paid for r in session.receipts)) < 1e-3
+        return fleet, result, time.perf_counter() - t0
+
+    def fetches(f):
+        return sum(n.stats.chunkset_fetches for n in f.rpcs)
+
+    def effective_hit_rate(f):
+        # a coalesced miss rides another request's in-flight fetch — like a
+        # hit, it costs the SPs nothing; storm contention only shifts hits
+        # into the coalesced bucket (and hedged legs may add/skip a fetch),
+        # never evicts streaming entries
+        hits = sum(n.stats.cache_hits for n in f.rpcs)
+        total = hits + fetches(f) + f.coalesced()
+        return (hits + f.coalesced()) / total if total else 0.0
+
+    fg_only = foreground()
+    combined = sorted(fg_only + storm(), key=lambda r: r.t_ms)
+    polluted = sorted(fg_only + storm(cache_bypass=False), key=lambda r: r.t_ms)
+
+    base_fleet, base, wall_b = one_run(fg_only, "baseline")
+    h0, p99_0 = base_fleet.cache_hit_rate(), base.percentile(99.0, kind="read")
+    fleet, res, wall_c = one_run(combined, "combined")
+    h1, p99_1 = fleet.cache_hit_rate(), res.percentile(99.0, kind="read")
+    pol_fleet, pol, _ = one_run(polluted, "polluted")
+    h2 = pol_fleet.cache_hit_rate()
+
+    served = fleet.samples_served()
+    proof_bytes = fleet.sample_proof_bytes()
+    row(
+        "backbone_serve/das_storm",
+        wall_c * 1e6 / len(combined),
+        f"samples={served};withheld={fleet.samples_withheld()};"
+        f"detections={res.das_detections};shed={res.shed};"
+        f"proof_bytes={proof_bytes};stream_p99={p99_1:.1f}ms;"
+        f"cache_hit={h1:.2f}(base {h0:.2f}, polluted {h2:.2f})",
+    )
+
+    assert served > 0 and proof_bytes > 0, "storm verified no proof-carrying reads"
+    # the cache_bypass hint keeps the streaming hot cache untouched: the
+    # storm never evicts streaming entries, so the cache's absorption
+    # (hits + coalesced per lookup) is conserved and the SP fetch count
+    # moves only by hedged legs firing differently under contention
+    eff0, eff1 = effective_hit_rate(base_fleet), effective_hit_rate(fleet)
+    assert abs(eff1 - eff0) <= 0.01, (
+        f"DAS storm cost streaming cache absorption: {eff1:.4f} vs "
+        f"baseline {eff0:.4f}"
+    )
+    assert abs(fetches(fleet) - fetches(base_fleet)) <= 2 + fleet.hedges_launched(), (
+        f"DAS storm changed cache contents: {fetches(fleet)} fetches "
+        f"vs baseline {fetches(base_fleet)}"
+    )
+    assert abs(h1 - h0) <= 0.05, (
+        f"DAS storm perturbed the streaming cache hit rate: {h1:.3f} vs {h0:.3f}"
+    )
+    # … while ignoring the hint measurably pollutes the LRU: extra SP
+    # fetches for streaming chunksets the storm evicted, a lower hit rate
+    assert fetches(pol_fleet) > fetches(fleet), (
+        f"cache-hostile storm without bypass did not pollute: "
+        f"{fetches(pol_fleet)} fetches !> {fetches(fleet)}"
+    )
+    assert h2 < h1 - 0.05, (
+        f"cache-hostile storm without bypass did not pollute: {h2:.3f} !< {h1:.3f}"
+    )
+    # streaming tail stays inside the DAS budget under the concurrent storm
+    bound = CONFIG.das_p99_budget * p99_0 + 5.0
+    assert p99_1 <= bound, (
+        f"DAS storm blew the streaming tail: p99 {p99_1:.1f}ms > "
+        f"bound {bound:.1f}ms (baseline {p99_0:.1f}ms)"
+    )
+    # same-seed determinism: the interleaved storm rides the digest
+    _, res2, _ = one_run(sorted(fg_only + storm(), key=lambda r: r.t_ms), "redo")
+    assert res.digest() == res2.digest(), (
+        f"das determinism violated: {res.digest()[:16]} != {res2.digest()[:16]}"
+    )
+    print(f"# das determinism digest: {res.digest()[:16]} OK")
+
+    share_bytes_served = served * spec.share_bytes
+    emit_json("das", {
+        "spec": {"k": spec.k, "side": spec.side, "share_bytes": spec.share_bytes,
+                 "samples_per_epoch": spec.samples_per_epoch,
+                 "proof_bytes_per_share": records[0].proof_bytes},
+        "detection": [
+            {"fraction": pt.fraction, "q_effective": pt.q_effective,
+             "samples": pt.samples, "trials": pt.trials,
+             "measured": pt.measured, "analytic": pt.analytic,
+             "mean_samples_to_detect": (
+                 pt.mean_samples_to_detect
+                 if pt.mean_samples_to_detect != float("inf") else None),
+             "mean_sample_bytes": pt.mean_sample_bytes}
+            for pt in points
+        ],
+        "detection_tolerance": tol,
+        "detection_wall_s": wall_det,
+        "bytes_to_detect": mean_detect_bytes,
+        "full_chunk_audit_bytes": layout.chunk_bytes,
+        "storm": {
+            "requests": num_das,
+            "samples_served": served,
+            "samples_withheld": fleet.samples_withheld(),
+            "detections": res.das_detections,
+            "shed": res.shed,
+            "proof_bytes": proof_bytes,
+            "proof_overhead": (proof_bytes / share_bytes_served
+                               if share_bytes_served else 0.0),
+            "sample_p99_ms": res.percentile(99.0, kind="das"),
+            "goodput_mbps": res.goodput_mbps,
+        },
+        "streaming": {
+            "p99_baseline_ms": p99_0, "p99_under_storm_ms": p99_1,
+            "p99_budget": CONFIG.das_p99_budget,
+            "cache_hit_baseline": h0, "cache_hit_under_storm": h1,
+            "cache_hit_polluted": h2,
+            "chunkset_fetches_baseline": fetches(base_fleet),
+            "chunkset_fetches_under_storm": fetches(fleet),
+            "chunkset_fetches_polluted": fetches(pol_fleet),
+            "effective_hit_baseline": eff0,
+            "effective_hit_under_storm": eff1,
+        },
+        "digest": res.digest()[:16],
+    })
+
+
 def run_all():
     run()
     run_concurrent()
     run_background()
     run_churn()
+    run_das()
 
 
 if __name__ == "__main__":
@@ -629,5 +852,7 @@ if __name__ == "__main__":
         run_background()
     elif "churn" in sys.argv[1:]:
         run_churn()
+    elif "das" in sys.argv[1:]:
+        run_das()
     else:
         run_all()

@@ -9,11 +9,16 @@ line rate.
 """
 from __future__ import annotations
 
+import os
+
 import numpy as np
 
-from benchmarks.common import row, timeit
+from benchmarks.common import emit_json, row, timeit
 from repro.core import gf
+from repro.core.extend2d import Extend2D
 from repro.kernels import ops
+
+SMOKE = bool(int(os.environ.get("GF_SMOKE", "0")))
 
 # v5e VPU: 4 MXU-independent vector units, ~1e12 int32 op/s effective (est.)
 VPU_INT_OPS = 1.0e12
@@ -42,5 +47,69 @@ def run():
     row("gf_kernel/pallas_interpret_64KiB", t_kern * 1e6, f"allclose={ok}")
 
 
+def run_tiny_batch():
+    """The DAS small-and-wide regime (§3.5 meets ``storage/das.py``).
+
+    A light-client sampling plane issues thousands of *tiny* GF ops —
+    a k x k extension or a 1 x k share reconstruction over S=512-byte
+    shares — where the fixed per-call overhead (table lookups, kernel
+    launch) dominates the O(k*S) arithmetic.  The sweep times B looped
+    tiny calls against ONE wide call on the horizontally stacked operand
+    (identical bytes out), numpy and Pallas paths: exactly how
+    ``Extend2D.extend_batch`` extends many blobs' squares per axis and
+    how the sampler's decode path amortizes verification math.
+    """
+    rng = np.random.default_rng(1)
+    k, S = 4, 512
+    lay = Extend2D(k=k)
+    E = lay.code.encode_matrix  # (k, k): the per-axis extension op
+    Rrow = E[:1]  # (1, k): reconstruct ONE share from k knowns
+    batches = (256, 1024) if SMOKE else (256, 1024, 4096)
+    sweep = {}
+    for name, A in (("extend_kxk", E), ("recover_1xk", Rrow)):
+        for batch in batches:
+            shares = rng.integers(0, 256, (batch, k, S), dtype=np.uint8)
+            wide = np.ascontiguousarray(
+                shares.transpose(1, 0, 2).reshape(k, batch * S)
+            )
+            t_loop = timeit(lambda: [gf.matmul_np(A, s) for s in shares],
+                            repeats=2)
+            t_wide = timeit(lambda: gf.matmul_np(A, wide), repeats=2)
+            got = np.concatenate([gf.matmul_np(A, s) for s in shares], axis=1)
+            assert np.array_equal(got, gf.matmul_np(A, wide)), (
+                f"wide != looped for {name} b{batch}"
+            )
+            mb = batch * k * S / 1e6
+            speedup = t_loop / t_wide
+            row(f"gf_kernel/tiny_{name}_loop_b{batch}", t_loop * 1e6 / batch,
+                f"{mb / t_loop:.0f}MB/s_cpu")
+            row(f"gf_kernel/tiny_{name}_wide_b{batch}", t_wide * 1e6,
+                f"{mb / t_wide:.0f}MB/s_cpu;speedup={speedup:.1f}x")
+            sweep[f"{name}_b{batch}"] = {
+                "loop_s": t_loop, "wide_s": t_wide, "speedup": speedup,
+                "mb": mb,
+            }
+    # batching must actually pay: the widest numpy call beats the loop
+    widest = sweep[f"extend_kxk_b{batches[-1]}"]
+    assert widest["speedup"] > 1.0, (
+        f"wide call no faster than {batches[-1]} tiny calls "
+        f"({widest['speedup']:.2f}x)"
+    )
+    # Pallas path on the same wide operand (interpret mode off-TPU:
+    # correctness + the call shape the Mosaic kernel would get)
+    batch = batches[0]
+    shares = rng.integers(0, 256, (batch, k, S), dtype=np.uint8)
+    wide = np.ascontiguousarray(shares.transpose(1, 0, 2).reshape(k, batch * S))
+    t_pal = timeit(lambda: np.asarray(ops.gf_matmul(E, wide)),
+                   repeats=1, warmup=1)
+    ok = np.array_equal(np.asarray(ops.gf_matmul(E, wide)),
+                        gf.matmul_np(E, wide))
+    assert ok, "Pallas wide tiny-batch call diverged from numpy"
+    row(f"gf_kernel/tiny_pallas_wide_b{batch}", t_pal * 1e6, f"allclose={ok}")
+    sweep[f"pallas_wide_b{batch}"] = {"wide_s": t_pal, "allclose": ok}
+    emit_json("gf_tiny_batch", sweep)
+
+
 if __name__ == "__main__":
     run()
+    run_tiny_batch()

@@ -82,6 +82,16 @@ echo "== membership-churn smoke (budget: ${CHURN_BUDGET_S:-240}s) =="
 BACKBONE_SMOKE=1 run_budgeted "${CHURN_BUDGET_S:-240}" "membership churn" \
     python -m benchmarks.backbone_serve churn
 
+echo "== DAS-sampling smoke (budget: ${DAS_BUDGET_S:-180}s) =="
+# the proof-carrying light-client read regime: measured withholding
+# detection on the analytic 1-(1-q)^s curve (seeded exact-count
+# adversaries, zero-withholding control), detection cheaper in bytes than
+# a full-chunk audit, and a cache-hostile uniform sample storm riding the
+# event engine concurrently with streaming — cache_bypass keeps the
+# streaming hit rate intact, p99 stays in budget, digests replay equal
+BACKBONE_SMOKE=1 run_budgeted "${DAS_BUDGET_S:-180}" "das sampling" \
+    python -m benchmarks.backbone_serve das
+
 echo "== streaming smoke: video through BlobReader (budget: ${VIDEO_BUDGET_S:-120}s) =="
 # exercises the session API end to end: open/stream receipts, pay-on-delivery,
 # settlement conservation, and the 40 Mbps 4K bar under failures
@@ -94,7 +104,7 @@ import json, os
 path = os.environ["BENCH_JSON"]
 with open(path) as f:
     doc = json.load(f)
-for section in ("serve_grid", "concurrent_ramp", "background", "churn"):
+for section in ("serve_grid", "concurrent_ramp", "background", "churn", "das"):
     assert section in doc, f"{path} missing section {section!r}"
 print(f"{path}: {', '.join(sorted(doc))} OK")
 EOF

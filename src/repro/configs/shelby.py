@@ -75,6 +75,18 @@ class ShelbyConfig:
     churn_joins_per_epoch: int = 0
     churn_drain_budget_ms: float = 300.0
     churn_p99_budget: float = 1.8
+    # data-availability sampling (storage/das.py): the 2-D extension's data
+    # square side (k x k -> 2k x 2k shares), per-share byte size, samples a
+    # light client draws per blob per epoch, the master switch, an optional
+    # override of the modeled per-share proof wire size (None = the true
+    # Merkle-path size), and the streaming-p99 inflation budget the bench
+    # asserts under a concurrent DAS storm
+    das_k: int = 4
+    das_share_bytes: int = 512
+    das_samples_per_epoch: int = 16
+    das_extension: bool = True
+    das_proof_bytes_per_share: int | None = None
+    das_p99_budget: float = 1.8
 
     def background(self):
         """The per-SP BackgroundSpec these knobs describe."""
@@ -125,6 +137,21 @@ class ShelbyConfig:
             max_queued_requests=self.rpc_max_queued_requests,
             max_inflight_fetches=self.rpc_max_inflight_fetches,
             deadline_ms=self.rpc_shed_deadline_ms,
+        )
+
+    def das(self):
+        """The DASSpec these knobs describe, or None when the 2-D
+        extension is switched off (no dispersal, no sampling plane)."""
+        from repro.storage.das import DASSpec
+
+        if not self.das_extension:
+            return None
+        return DASSpec(
+            k=self.das_k,
+            share_bytes=self.das_share_bytes,
+            samples_per_epoch=self.das_samples_per_epoch,
+            extension=True,
+            proof_bytes_per_share=self.das_proof_bytes_per_share,
         )
 
     def resolve_decode_matmul(self):

@@ -71,6 +71,12 @@ class SimResult:
     repairs_completed: int = 0
     sps_joined: int = 0
     sps_departed: int = 0
+    # DAS sampling plane (das != None): per-epoch light-client sampling
+    # rounds over every blob's 2-D extension — pay-per-sample through the
+    # same session channels, detections = blobs flagged unavailable
+    das_samples: int = 0
+    das_detections: int = 0
+    das_proof_bytes: int = 0
 
     def utility(self, sp: int) -> float:
         return self.utilities[sp]
@@ -94,6 +100,7 @@ def run_sim(
     background: BackgroundSpec | None = None,  # per-SP audit/repair budget
     churn: ChurnSpec | None = None,  # epoch-scale membership churn plane
     epoch_ms: float = 250.0,  # simulated wall span of one churned epoch
+    das=None,  # storage.das.DASSpec: extend blobs + sample every epoch
 ) -> SimResult:
     params = params or AuditParams(p_a=0.5, auditors_per_audit=4, C=50, p_ata=0.3)
     layout = layout or BlobLayout(k=4, m=2, chunkset_bytes_target=64 * 1024)
@@ -111,7 +118,7 @@ def run_sim(
         for r in range(num_rpcs)
     ]
     fleet = RPCFleet(rpcs, CacheAffinityPolicy())
-    client = ShelbyClient(contract, fleet, deposit=1e9)
+    client = ShelbyClient(contract, fleet, deposit=1e9, das=das)
 
     # crashes take effect AFTER the write phase (the contract would never
     # assign chunks to an SP that is already down)
@@ -146,6 +153,10 @@ def run_sim(
     repairs_completed = 0
     sps_joined = 0
     sps_departed = 0
+
+    das_samples = 0
+    das_detections = 0
+    das_proof_bytes = 0
 
     last = None
     for epoch in range(epochs):
@@ -201,6 +212,16 @@ def run_sim(
                 repairs_completed += sum(
                     1 for r in mplane.repair.records if r.ok
                 )
+        if das is not None and das.extension and contract.das:
+            # the light-client sampling round: every blob's extension is
+            # probed with s seeded coordinates through the same session —
+            # pay-per-sample flows through settlement conservation below
+            verdicts = client.current_session.sample_availability(
+                epoch=epoch, seed=seed * 733 + epoch
+            )
+            das_samples += sum(v.verified + v.failures for v in verdicts)
+            das_detections += sum(1 for v in verdicts if not v.available)
+            das_proof_bytes += sum(v.proof_bytes for v in verdicts)
         for i, sp in sps.items():
             if i not in contract.dead_sps():
                 contract.submit_scoreboard(epoch, sp.scoreboard)
@@ -251,6 +272,9 @@ def run_sim(
         repairs_completed=repairs_completed,
         sps_joined=sps_joined,
         sps_departed=sps_departed,
+        das_samples=das_samples,
+        das_detections=das_detections,
+        das_proof_bytes=das_proof_bytes,
     )
 
 

@@ -55,7 +55,7 @@ def build_cluster(num_sps: int = 8, layout: BlobLayout | None = None,
         for r in range(num_rpcs)
     ]
     fleet = RPCFleet(rpcs, CacheAffinityPolicy())
-    client = ShelbyClient(contract, fleet, deposit=1e9)
+    client = ShelbyClient(contract, fleet, deposit=1e9, das=CONFIG.das())
     return contract, sps, fleet.primary, client
 
 

@@ -116,6 +116,7 @@ class RPCFleet:
         self._ewma_seeded = [False] * len(self.rpcs)
         self.routed = [0] * len(self.rpcs)
         self.chunkset_reads = 0
+        self.samples_routed = 0  # DAS samples (accounted apart from reads)
         self.bytes_served = 0
         self.request_latencies_ms: list[float] = []
         # overload accounting (legs = one node's share of one request)
@@ -302,6 +303,67 @@ class RPCFleet:
             self.request_latencies_ms.append(latency)
         return served
 
+    # -- DAS sampling (tiny proof-carrying reads) ----------------------------------
+    def sample_share_task(
+        self,
+        loop: EventLoop,
+        blob_id: int,
+        row: int,
+        col: int,
+        *,
+        client: str | None = None,
+        cache_bypass: bool = True,
+        label: str = "das",
+    ):
+        """Task: route ONE DAS sample to a node, fetch + verify it there.
+
+        Routing uses the policy with a coordinate-derived key (each share
+        is its own cache/decode unit), but samples are accounted apart
+        from chunkset reads: they do not touch ``chunkset_reads`` (so the
+        streaming ``cache_hit_rate`` stays a streaming metric) and do not
+        feed the latency EWMA (tiny single-slot reads would make every
+        node look fast to the latency-aware router).  A shed leg retries
+        once on the least-loaded sibling, like any other request.
+        """
+        from repro.storage.rpc import Overloaded  # deferred: import cycle
+
+        rec = self.primary.contract.das.get(blob_id)
+        if rec is None:
+            from repro.storage.rpc import ReadError
+
+            raise ReadError(f"blob {blob_id} has no DAS extension")
+        key = (blob_id, rec.side * rec.side + row * rec.side + col)
+        i = self.policy.pick(key, client, self)
+        self.routed[i] += 1
+        self.samples_routed += 1
+        prop = self._prop(i, client)
+        if prop > 0:
+            yield Sleep(prop)
+        srv, extra = i, 2.0 * prop
+        try:
+            ss = yield from self.rpcs[i].sample_share_task(
+                loop, blob_id, row, col, cache_bypass=cache_bypass,
+                label=f"{label}/{self.node_ids[i]}",
+            )
+        except Overloaded:
+            self.shed_legs += 1
+            j = self._sibling(i)
+            if j is None:
+                raise
+            prop_j = self._prop(j, client)
+            if prop + prop_j > 0:
+                yield Sleep(prop + prop_j)
+            ss = yield from self.rpcs[j].sample_share_task(
+                loop, blob_id, row, col, cache_bypass=cache_bypass,
+                label=f"{label}/{self.node_ids[j]}",
+            )
+            self.retried_legs += 1
+            self.routed[j] += 1
+            srv, extra = j, 2.0 * prop + 2.0 * prop_j
+        return dataclasses.replace(
+            ss, latency_ms=ss.latency_ms + extra, rpc_id=self.node_ids[srv]
+        )
+
     def _sibling(self, i: int) -> int | None:
         """Deterministic overflow target for a shed leg: the least-routed
         OTHER node (ties by index); None on a fleet of one."""
@@ -364,6 +426,18 @@ class RPCFleet:
     def requests_shed(self) -> int:
         """Node-level admission refusals (each is one leg's Overloaded)."""
         return sum(r.stats.shed_requests for r in self.rpcs)
+
+    def samples_served(self) -> int:
+        """DAS shares delivered + verified across the fleet."""
+        return sum(r.stats.samples_served for r in self.rpcs)
+
+    def samples_withheld(self) -> int:
+        """DAS samples an SP went silent on (the detection signal)."""
+        return sum(r.stats.samples_withheld for r in self.rpcs)
+
+    def sample_proof_bytes(self) -> int:
+        """Proof bandwidth moved for DAS samples, fleet-wide."""
+        return sum(r.stats.sample_proof_bytes for r in self.rpcs)
 
     def latency_percentiles(self, *qs: float) -> tuple[float, ...]:
         if not self.request_latencies_ms:

@@ -52,6 +52,24 @@ class ReadRequest:
     length: int
 
 
+@dataclasses.dataclass(frozen=True)
+class SampleRequest:
+    """One DAS sample: a tiny proof-carrying read of share (row, col).
+
+    ``cache_bypass`` is the cache-steering hint threaded workload ->
+    fleet -> RPCNode: sample storms are cache-hostile (uniform random
+    single-use coordinates), so by default they skip hot-cache insertion
+    rather than churn streaming readers' entries out.
+    """
+
+    t_ms: float
+    client: str
+    blob_id: int
+    row: int
+    col: int
+    cache_bypass: bool = True
+
+
 def video_streaming(
     meta,
     *,
@@ -152,6 +170,44 @@ def zipf_hotset(
     return out
 
 
+def das_storm(
+    das_records,
+    *,
+    clients: list[str],
+    num_requests: int = 200,
+    interarrival_ms: float = 0.3,
+    seed: int = 0,
+    arrival: str = "poisson",
+    cache_bypass: bool = True,
+) -> list[SampleRequest]:
+    """Open-loop storm of single-share DAS sample requests.
+
+    ``das_records`` expose ``.blob_id`` and ``.side`` (the contract's
+    :class:`~repro.core.contract.DASRecord`).  Blobs, coordinates and
+    issuing clients are drawn uniformly — the cache-hostile opposite of
+    ``zipf_hotset`` — and the generator is a pure function of its seed,
+    so the storm joins the determinism digest like any other workload.
+    """
+    if arrival not in ("fixed", "poisson"):
+        raise ValueError(f"arrival must be fixed|poisson, got {arrival!r}")
+    recs = list(das_records)
+    rng = np.random.default_rng(seed)
+    out, t = [], 0.0
+    for _ in range(num_requests):
+        rec = recs[int(rng.integers(0, len(recs)))]
+        row = int(rng.integers(0, rec.side))
+        col = int(rng.integers(0, rec.side))
+        out.append(
+            SampleRequest(t, str(rng.choice(clients)), rec.blob_id, row, col,
+                          cache_bypass=cache_bypass)
+        )
+        if arrival == "poisson":
+            t += float(rng.exponential(interarrival_ms))
+        else:
+            t += interarrival_ms
+    return out
+
+
 # ---------------------------------------------------------------------------
 # arrival-process drivers on the shared event engine
 # ---------------------------------------------------------------------------
@@ -191,6 +247,7 @@ class RequestRecord:
     client: str
     blob_id: int
     shed: bool = False  # refused at admission (Overloaded), not a failure
+    kind: str = "read"  # "read" | "das" (a single-share sample)
 
 
 @dataclasses.dataclass
@@ -233,12 +290,28 @@ class ReplayResult:
             return 0.0
         return sum(r.nbytes for r in self.records if r.ok) * 8e-3 / self.span_ms
 
-    def latencies_ms(self) -> list[float]:
-        return [r.latency_ms for r in self.records if r.ok]
+    def latencies_ms(self, kind: str | None = None) -> list[float]:
+        return [
+            r.latency_ms for r in self.records
+            if r.ok and (kind is None or r.kind == kind)
+        ]
 
-    def percentile(self, q: float) -> float:
-        lats = self.latencies_ms()
+    def percentile(self, q: float, kind: str | None = None) -> float:
+        lats = self.latencies_ms(kind)
         return float(np.percentile(np.asarray(lats), q)) if lats else 0.0
+
+    # -- DAS sampling accounting ------------------------------------------------
+    @property
+    def das_samples(self) -> int:
+        """Sample requests that ran to a verdict (served or hard-failed)."""
+        return sum(1 for r in self.records if r.kind == "das" and not r.shed)
+
+    @property
+    def das_detections(self) -> int:
+        """Samples that hit a withheld/bad share (ReadError, unpaid)."""
+        return sum(
+            1 for r in self.records if r.kind == "das" and not r.ok and not r.shed
+        )
 
     # -- background-plane accounting ------------------------------------------------
     @property
@@ -272,7 +345,7 @@ class ReplayResult:
         for r in self.records:
             h.update(
                 f"{r.index}|{r.t_ms!r}|{r.finish_ms!r}|{r.latency_ms!r}|"
-                f"{r.nbytes}|{r.ok}|{r.client}|{r.blob_id}|{r.shed}\n".encode()
+                f"{r.nbytes}|{r.ok}|{r.client}|{r.blob_id}|{r.shed}|{r.kind}\n".encode()
             )
         for b in self.background:
             h.update(
@@ -364,6 +437,38 @@ def _serve_one(loop, fleet, records, i, req, label, on_served, on_shed=None):
     return sr
 
 
+def _sample_one(loop, fleet, records, i, req, label, on_sampled, on_shed=None):
+    """Task body: one DAS sample through the fleet, recorded like a read.
+
+    A hard failure (withheld / bad share) is the sampler's DETECTION
+    signal, not an error to retry: it lands as ``ok=False, kind="das"``
+    and debits nothing (pay-on-delivery)."""
+    from repro.storage.rpc import Overloaded, ReadError
+
+    t0 = loop.now
+    try:
+        ss = yield from fleet.sample_share_task(
+            loop, req.blob_id, req.row, req.col,
+            client=req.client, cache_bypass=req.cache_bypass, label=label,
+        )
+    except Overloaded:
+        records[i] = RequestRecord(i, t0, loop.now, loop.now - t0, 0, False,
+                                   req.client, req.blob_id, shed=True, kind="das")
+        if on_shed is not None:
+            on_shed(i, req, loop.now - t0)
+        return
+    except ReadError:
+        records[i] = RequestRecord(i, t0, loop.now, loop.now - t0, 0, False,
+                                   req.client, req.blob_id, kind="das")
+        return
+    finish = t0 + ss.latency_ms
+    records[i] = RequestRecord(i, t0, finish, ss.latency_ms, ss.nbytes,
+                               True, req.client, req.blob_id, kind="das")
+    if on_sampled is not None:
+        on_sampled(i, req, ss)
+    return ss
+
+
 def _planes(background) -> list:
     """Normalize the ``background`` argument: None, one plane, or a list of
     planes — anything with ``spawn(loop)`` and a ``records`` list (see
@@ -394,12 +499,18 @@ def replay_open_loop(
     *,
     on_served=None,  # (index, request, ServedRange) -> None, completion order
     on_shed=None,  # (index, request, nack_latency_ms) -> None
+    on_sampled=None,  # (index, SampleRequest, SampledShare) -> None
     background=None,  # plane(s) with spawn(loop): audits/repair share the loop
     trace: bool = False,
 ) -> ReplayResult:
     """Open-loop replay: every request is its own task spawned at its
     arrival time on ONE shared loop, so all in-flight requests' hedge
     timers, recoveries, SP queues and NIC transfers interleave.
+
+    ``requests`` may mix :class:`ReadRequest` and :class:`SampleRequest`
+    (a streaming workload concurrent with a DAS storm is just one merged
+    request list); sample outcomes land in the same records under
+    ``kind="das"``.
 
     ``background`` plane(s) are spawned on the SAME loop before it runs:
     audit proofs and repair helper reads contend with the replay for NICs,
@@ -408,11 +519,13 @@ def replay_open_loop(
     loop = EventLoop(network=fleet.network, trace=trace)
     records: list[RequestRecord | None] = [None] * len(requests)
     for i, req in enumerate(requests):
-        loop.spawn(
-            _serve_one(loop, fleet, records, i, req, f"req{i}", on_served,
-                       on_shed),
-            at_ms=req.t_ms, label=f"req{i}",
-        )
+        if isinstance(req, SampleRequest):
+            task = _sample_one(loop, fleet, records, i, req, f"req{i}",
+                               on_sampled, on_shed)
+        else:
+            task = _serve_one(loop, fleet, records, i, req, f"req{i}",
+                              on_served, on_shed)
+        loop.spawn(task, at_ms=req.t_ms, label=f"req{i}")
     planes = _planes(background)
     for p in planes:
         p.spawn(loop)

@@ -238,10 +238,135 @@ class ShelbySession:
             )
             self.receipts.append(receipts[i])
 
+        def on_sampled(i, req, ss):
+            from repro.storage.das import SampleReceipt
+
+            amount = max(self._price * ss.nbytes, 1e-12)
+            self._channel(ss.rpc_id).pay(amount)
+            receipt = SampleReceipt(
+                blob_id=req.blob_id, row=req.row, col=req.col,
+                nbytes=ss.nbytes, share_bytes=ss.share_bytes,
+                proof_bytes=ss.proof_bytes, latency_ms=ss.latency_ms,
+                payments={ss.rpc_id: amount}, verified=True,
+                cache_hit=ss.cache_hit,
+            )
+            receipts[i] = receipt
+            self.receipts.append(receipt)
+
         result = replay_open_loop(self._fleet, requests, on_served=on_served,
-                                  on_shed=on_shed, background=background,
-                                  trace=trace)
+                                  on_shed=on_shed, on_sampled=on_sampled,
+                                  background=background, trace=trace)
         return receipts, result
+
+    # -- DAS sampling (pay-per-sample light-client reads) --------------------------
+    def sample_availability(
+        self,
+        blob_ids: list[int] | None = None,
+        *,
+        epoch: int = 0,
+        samples: int | None = None,
+        seed: int = 0,
+        client: str | None = None,
+        cache_bypass: bool = True,
+        t_ms: float = 0.0,
+    ):
+        """One sampling round: draw ``samples`` uniform share coordinates
+        per blob (seeded, with replacement — see
+        :func:`repro.storage.das.draw_coords`), fetch them concurrently
+        through the fleet as tiny paid proof-carrying reads, verify against
+        each blob's on-chain DAS root, and return one
+        :class:`~repro.storage.das.AvailabilityVerdict` per blob.
+
+        Pay-per-sample: each delivered+verified share debits its serving
+        node's channel by the per-byte price of share+proof wire bytes;
+        withheld/bad samples debit nothing (and flip the verdict).  The
+        :class:`~repro.storage.das.SampleReceipt` rows land in
+        ``self.receipts``, so ``close()``'s conservation check covers the
+        sampling economy unchanged."""
+        self._settle_check()
+        from repro.net.events import EventLoop
+        from repro.storage import das as das_mod
+        from repro.storage.rpc import Overloaded, ReadError
+
+        contract = self._client.contract
+        if blob_ids is None:
+            blob_ids = sorted(contract.das)
+        spec = getattr(self._client, "das", None)
+        s = samples if samples is not None else (
+            spec.samples_per_epoch if spec is not None else 16
+        )
+        loop = EventLoop(network=self._fleet.network)
+        plan: list[tuple[int, int, int, int, object]] = []
+
+        def one(blob_id, row, col):
+            try:
+                ss = yield from self._fleet.sample_share_task(
+                    loop, blob_id, row, col, client=client,
+                    cache_bypass=cache_bypass,
+                )
+            except Overloaded:
+                return ("shed", None)
+            except ReadError:
+                return ("failed", None)
+            return ("ok", ss)
+
+        for blob_id in blob_ids:
+            rec = contract.das[blob_id]
+            coords = das_mod.draw_coords(seed, blob_id, epoch, s, rec.side)
+            for j, (row, col) in enumerate(coords):
+                h = loop.spawn(one(blob_id, row, col), at_ms=t_ms,
+                               label=f"das/b{blob_id}/{j}")
+                plan.append((blob_id, j, row, col, h))
+        loop.run()
+
+        verdicts = []
+        by_blob: dict[int, list] = {}
+        for blob_id, j, row, col, h in plan:
+            by_blob.setdefault(blob_id, []).append((j, row, col, h))
+        for blob_id in blob_ids:
+            verified = failures = shed = 0
+            first_failure = None
+            sample_bytes = proof_bytes = 0
+            paid = 0.0
+            for j, row, col, h in by_blob.get(blob_id, []):
+                outcome, ss = h.result
+                if outcome == "shed":
+                    shed += 1
+                    self.receipts.append(das_mod.SampleReceipt(
+                        blob_id=blob_id, row=row, col=col, nbytes=0,
+                        share_bytes=0, proof_bytes=0, latency_ms=0.0,
+                        payments={}, verified=False, shed=True,
+                    ))
+                    continue
+                if outcome == "failed":
+                    failures += 1
+                    if first_failure is None:
+                        first_failure = j
+                    self.receipts.append(das_mod.SampleReceipt(
+                        blob_id=blob_id, row=row, col=col, nbytes=0,
+                        share_bytes=0, proof_bytes=0, latency_ms=0.0,
+                        payments={}, verified=False,
+                    ))
+                    continue
+                amount = max(self._price * ss.nbytes, 1e-12)
+                self._channel(ss.rpc_id).pay(amount)
+                paid += amount
+                verified += 1
+                sample_bytes += ss.nbytes
+                proof_bytes += ss.proof_bytes
+                self.receipts.append(das_mod.SampleReceipt(
+                    blob_id=blob_id, row=row, col=col, nbytes=ss.nbytes,
+                    share_bytes=ss.share_bytes, proof_bytes=ss.proof_bytes,
+                    latency_ms=ss.latency_ms, payments={ss.rpc_id: amount},
+                    verified=True, cache_hit=ss.cache_hit,
+                ))
+            verdicts.append(das_mod.AvailabilityVerdict(
+                blob_id=blob_id, epoch=epoch, samples=s, verified=verified,
+                failures=failures, shed=shed, first_failure=first_failure,
+                available=failures == 0, sample_bytes=sample_bytes,
+                proof_bytes=proof_bytes, paid=paid,
+            ))
+        return verdicts
 
     def read(
         self,
@@ -448,6 +573,7 @@ class ShelbyClient:
         layout: BlobLayout | None = None,
         read_price_per_byte: float = 1e-9,
         deposit: float = 100.0,
+        das=None,  # storage.das.DASSpec: auto-extend blobs on put()
     ):
         self.contract = contract
         self.fleet = (
@@ -457,6 +583,7 @@ class ShelbyClient:
         self.layout = layout or self.fleet.primary.layout
         self.read_price_per_byte = read_price_per_byte
         self.deposit_per_node = deposit
+        self.das = das
         self._session: ShelbySession | None = None
 
     @property
@@ -531,6 +658,15 @@ class ShelbyClient:
             epochs=epochs,
         )
         self.fleet.primary.write_blob(meta, prep.encoded_chunksets)
+        if self.das is not None and self.das.extension:
+            # DAS plane: extend the blob into its 2k x 2k share square and
+            # disperse it alongside the chunksets (see storage/das.py)
+            from repro.storage.das import extend_and_disperse
+
+            extend_and_disperse(
+                self.contract, self.fleet.primary.sps, meta.blob_id, data,
+                self.das, matmul=self.fleet.primary.decode_matmul,
+            )
         return meta
 
     # -- reads (§2.2): pay-on-delivery via the implicit session ---------------------
@@ -564,6 +700,11 @@ class ShelbyClient:
         :meth:`ShelbySession.replay`)."""
         return self.current_session.replay(requests, background=background,
                                            trace=trace)
+
+    def sample_availability(self, blob_ids: list[int] | None = None, **kw):
+        """One DAS sampling round through the implicit session (see
+        :meth:`ShelbySession.sample_availability`)."""
+        return self.current_session.sample_availability(blob_ids, **kw)
 
     def open(self, blob_id: int, readahead: int = 0) -> BlobReader:
         return self.current_session.open(blob_id, readahead=readahead)
