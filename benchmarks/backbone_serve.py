@@ -23,6 +23,7 @@ import time
 import numpy as np
 
 from benchmarks.common import emit_json, row
+from repro.net.events import engine_counters
 from repro.configs.shelby import CONFIG, resolve_decode_matmul
 from repro.core import audit as audit_mod
 from repro.core.contract import ShelbyContract
@@ -62,6 +63,21 @@ POLICIES = {
     "affinity": CacheAffinityPolicy,
     "p2c": lambda: PowerOfTwoPolicy(seed=0),
 }
+
+
+def _engine_stats(counters0: tuple[int, float]) -> dict:
+    """Engine throughput over a section: the delta of the module-wide
+    (events, wall_s) counters since ``counters0`` — sections with many
+    private loops (sequential grid, sweeps) get honest totals without
+    threading every loop's telemetry out by hand."""
+    ev0, w0 = counters0
+    ev1, w1 = engine_counters()
+    d_ev, d_w = ev1 - ev0, w1 - w0
+    return {
+        "events": d_ev,
+        "wall_s": d_w,
+        "events_per_sec": d_ev / d_w if d_w > 0 else 0.0,
+    }
 
 
 def _world(nic: NICSpec | None = None, sp_slots: int | None = None):
@@ -148,6 +164,7 @@ def _fresh_fleet(layout, contract, bb, sps, policy, *, nic: NICSpec | None = Non
 
 def run():
     layout, contract, bb, sps, metas, _ = _world()
+    c0 = engine_counters()
     p99_zipf = {}
     grid_json = {}
     for pname, policy_factory in POLICIES.items():
@@ -194,6 +211,7 @@ def run():
                 "coalesced": fleet.coalesced(),
                 "shed_rate": 0.0,  # sequential grid never saturates a node
             }
+    grid_json["engine"] = _engine_stats(c0)
     emit_json("serve_grid", grid_json)
     # regression-shaped bars: hedging must keep tail latency under the
     # 250 ms straggler for the cache-friendly hot-object workload
@@ -249,6 +267,7 @@ def run_concurrent():
     print(f"# concurrent determinism digest: {a.digest()[:16]} OK")
 
     ramp_json = {}
+    c0 = engine_counters()
     free_p99, admitted_p99, admitted_shed, coalesced_total = [], [], [], 0
     for rate in rates_rps:
         per_rate = {"offered_rps": rate}
@@ -286,8 +305,10 @@ def run_concurrent():
                 "hedged_wasted": fleet.hedged_wasted(),
                 "coalesced": fleet.coalesced(),
                 "retried_legs": fleet.retried_legs,
+                "engine_events_per_sec": result.engine_events_per_sec,
             }
         ramp_json[f"{rate}rps"] = per_rate
+    ramp_json["engine"] = _engine_stats(c0)
     emit_json("concurrent_ramp", ramp_json)
 
     # the saturation story, asserted: the free-running fleet's tail blows
@@ -322,6 +343,7 @@ def run_background():
     """
     nic = CONFIG.nic()
     layout, contract, bb, sps, metas, _ = _world(nic=nic, sp_slots=2)
+    c0 = engine_counters()
     bb.register_node("repairer", "dc0", nic=nic)
     num_requests = 80 if SMOKE else 300
     rate_rps = 400.0  # busy but below the knee: contention is measurable
@@ -401,9 +423,11 @@ def run_background():
 
     emit_json("background", {
         "quiescent": {"goodput_mbps": quiet.goodput_mbps, "p50_ms": q50,
-                      "p99_ms": q99},
+                      "p99_ms": q99,
+                      "engine_events_per_sec": quiet.engine_events_per_sec},
         "loaded": {"goodput_mbps": loaded.goodput_mbps, "p50_ms": l50,
-                   "p99_ms": l99},
+                   "p99_ms": l99,
+                   "engine_events_per_sec": loaded.engine_events_per_sec},
         "p99_inflation": l99 / q99 if q99 > 0 else 1.0,
         "p99_budget": CONFIG.bg_p99_budget,
         "audit_ops": len(audit_recs),
@@ -413,6 +437,7 @@ def run_background():
         "background_bytes": loaded.background_bytes,
         "bg_p99_ms": loaded.background_percentile(99.0),
         "repairer_nic_in_bytes": repairer_in,
+        "engine": _engine_stats(c0),
     })
 
 
@@ -441,6 +466,7 @@ def run_churn():
       determinism digests (membership events ride the digest).
     """
     nic = CONFIG.nic()
+    c0 = engine_counters()
     num_requests = 80 if SMOKE else 300
     rate_rps = 400.0
     epochs = 3
@@ -595,9 +621,11 @@ def run_churn():
 
     emit_json("churn", {
         "quiescent": {"goodput_mbps": quiet.goodput_mbps, "p50_ms": q50,
-                      "p99_ms": q99},
+                      "p99_ms": q99,
+                      "engine_events_per_sec": quiet.engine_events_per_sec},
         "churned": {"goodput_mbps": res.goodput_mbps, "p50_ms": c50,
-                    "p99_ms": c99},
+                    "p99_ms": c99,
+                    "engine_events_per_sec": res.engine_events_per_sec},
         "p99_inflation": c99 / q99 if q99 > 0 else 1.0,
         "p99_budget": CONFIG.churn_p99_budget,
         "epochs": epochs,
@@ -614,6 +642,7 @@ def run_churn():
         "repairer_nic_in_bytes": repairer_in,
         "durability": series,
         "digest": res.digest()[:16],
+        "engine": _engine_stats(c0),
     })
 
 
@@ -649,6 +678,7 @@ def run_das():
     spec = DASSpec(k=CONFIG.das_k, share_bytes=CONFIG.das_share_bytes,
                    samples_per_epoch=CONFIG.das_samples_per_epoch,
                    proof_bytes_per_share=CONFIG.das_proof_bytes_per_share)
+    c0 = engine_counters()
 
     # -- (a) measured detection vs the analytic curve ------------------------
     fractions = (0.0, 0.05, 0.15, 0.30)
@@ -821,6 +851,7 @@ def run_das():
                                if share_bytes_served else 0.0),
             "sample_p99_ms": res.percentile(99.0, kind="das"),
             "goodput_mbps": res.goodput_mbps,
+            "engine_events_per_sec": res.engine_events_per_sec,
         },
         "streaming": {
             "p99_baseline_ms": p99_0, "p99_under_storm_ms": p99_1,
@@ -834,6 +865,7 @@ def run_das():
             "effective_hit_under_storm": eff1,
         },
         "digest": res.digest()[:16],
+        "engine": _engine_stats(c0),
     })
 
 

@@ -18,12 +18,21 @@ def emit_json(section: str, payload) -> None:
         return
     doc = {}
     if os.path.exists(path):
-        with open(path) as f:
-            doc = json.load(f)
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+            if not isinstance(doc, dict):
+                doc = {}
+        except (json.JSONDecodeError, OSError):
+            # a corrupt/partial sidecar (killed run) must not sink the
+            # whole suite: start fresh, earlier sections are lost anyway
+            doc = {}
     doc[section] = payload
-    with open(path, "w") as f:
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "w") as f:
         json.dump(doc, f, indent=2, sort_keys=True)
         f.write("\n")
+    os.replace(tmp, path)  # atomic: readers never see a half-written file
 
 
 def timeit(fn, *, repeats: int = 3, warmup: int = 1):

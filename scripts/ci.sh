@@ -50,7 +50,11 @@ echo "== tier-1: pytest =="
 python -m pytest -q \
     --deselect tests/test_sharding.py::test_distributed_equivalence_8dev
 
-rm -f "$BENCH_JSON"
+# NOTE: no `rm -f "$BENCH_JSON"` here — emit_json merges sections
+# read-modify-write, so a pre-existing sidecar (earlier partial run, a
+# caller accumulating several suites into one file) keeps its other
+# sections instead of being clobbered; corrupt files are tolerated and
+# rewritten atomically by benchmarks/common.py.
 echo "== benchmark smoke (budget: ${SMOKE_BUDGET_S:-600}s) =="
 BACKBONE_SMOKE=1 run_budgeted "${SMOKE_BUDGET_S:-600}" "serving benchmarks" \
     python -m benchmarks.run backbone_serve read_throughput
@@ -92,6 +96,15 @@ echo "== DAS-sampling smoke (budget: ${DAS_BUDGET_S:-180}s) =="
 BACKBONE_SMOKE=1 run_budgeted "${DAS_BUDGET_S:-180}" "das sampling" \
     python -m benchmarks.backbone_serve das
 
+echo "== engine-scale smoke (budget: ${ENGINE_BUDGET_S:-420}s) =="
+# the million-request ramp: 10k -> 100k -> 1M requests against a 500-SP /
+# 50-RPC world through the cohort fast path — asserts the fast digest is
+# deterministic and byte-identical to task mode at 10k, >= 10x engine
+# events/sec over the binary-heap task baseline at 100k, and that the 1M
+# world completes inside the budget
+BACKBONE_SMOKE=1 run_budgeted "${ENGINE_BUDGET_S:-420}" "engine scale" \
+    python -m benchmarks.engine_scale
+
 echo "== streaming smoke: video through BlobReader (budget: ${VIDEO_BUDGET_S:-120}s) =="
 # exercises the session API end to end: open/stream receipts, pay-on-delivery,
 # settlement conservation, and the 40 Mbps 4K bar under failures
@@ -104,7 +117,8 @@ import json, os
 path = os.environ["BENCH_JSON"]
 with open(path) as f:
     doc = json.load(f)
-for section in ("serve_grid", "concurrent_ramp", "background", "churn", "das"):
+for section in ("serve_grid", "concurrent_ramp", "background", "churn", "das",
+                "engine"):
     assert section in doc, f"{path} missing section {section!r}"
 print(f"{path}: {', '.join(sorted(doc))} OK")
 EOF

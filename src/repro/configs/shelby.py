@@ -51,6 +51,10 @@ class ShelbyConfig:
     rpc_max_inflight_fetches: int | None = None  # live SP fetch tasks per node
     rpc_shed_deadline_ms: float | None = None  # brownout SLO on EWMA fetch ms
     # event-engine service/network model
+    # event-queue discipline: "calendar" (O(1) amortized calendar queue,
+    # the default) or "heap" (the binary-heap baseline); pop order — and
+    # therefore every determinism digest — is identical on both
+    event_engine: str = "calendar"
     sp_service_slots: int = 4  # concurrent disk reads per SP (FIFO queue beyond)
     # per-node NIC line rate wherever a Backbone is built from this config
     # (the concurrent serving bench); None = unlimited nodes

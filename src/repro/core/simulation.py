@@ -101,6 +101,7 @@ def run_sim(
     churn: ChurnSpec | None = None,  # epoch-scale membership churn plane
     epoch_ms: float = 250.0,  # simulated wall span of one churned epoch
     das=None,  # storage.das.DASSpec: extend blobs + sample every epoch
+    engine: str | None = None,  # event-queue discipline (calendar|heap)
 ) -> SimResult:
     params = params or AuditParams(p_a=0.5, auditors_per_audit=4, C=50, p_ata=0.3)
     layout = layout or BlobLayout(k=4, m=2, chunkset_bytes_target=64 * 1024)
@@ -192,10 +193,10 @@ def run_sim(
                 seed=seed * 1009 + epoch,
                 arrival="poisson",
             )
-            _, replay = client.replay(reqs, background=planes)
+            _, replay = client.replay(reqs, background=planes, engine=engine)
             reads_shed += replay.shed
         else:
-            loop = EventLoop()
+            loop = EventLoop(engine=engine)
             for p in planes:
                 p.spawn(loop)
             loop.run()

@@ -4,11 +4,15 @@ Before this module existed, every ``HedgedScheduler.fetch`` ran a *private*
 event heap to completion before the next request started: hedge timers and
 failure recoveries of concurrent requests could never interleave, and only
 trunk reservations coupled requests.  The :class:`EventLoop` here is the
-single global heap the entire read path now runs on — concurrent requests'
-issue/deadline/recovery events genuinely interleave, SPs queue, NICs
-serialize — while staying exactly reproducible: events are ordered by
+single global event queue the entire read path now runs on — concurrent
+requests' issue/deadline/recovery events genuinely interleave, SPs queue,
+NICs serialize — while staying exactly reproducible: events are ordered by
 ``(time, insertion seq)`` with a monotone sequence counter, so two runs of
-the same workload pop the same events in the same order.
+the same workload pop the same events in the same order.  The queue itself
+is a :class:`CalendarQueue` by default (O(1) expected per op at serving
+event rates); ``engine="heap"`` keeps the original binary heap, and both
+disciplines pop the identical total order, so swapping them never moves a
+digest (asserted by ``tests/test_engine_equivalence.py``).
 
 Tasks are plain Python generators that yield *effects*:
 
@@ -46,8 +50,24 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import itertools
+import time
 from collections import deque
 from typing import Any, Callable, Generator
+
+#: queue discipline new loops use when ``engine`` is not given explicitly.
+#: "calendar" is the production default; "heap" keeps the original binary
+#: heap alive so the engine-equivalence tests can diff the two pop orders.
+DEFAULT_ENGINE = "calendar"
+
+#: process-wide engine telemetry, accumulated across EVERY loop drained in
+#: this process — benchmark sections that drive many private loops (e.g. the
+#: sync serve grid) report a delta of this instead of one loop's counters.
+ENGINE_COUNTERS = {"events": 0, "wall_s": 0.0}
+
+
+def engine_counters() -> tuple[int, float]:
+    """Snapshot of (events processed, wall seconds) across all loops."""
+    return ENGINE_COUNTERS["events"], ENGINE_COUNTERS["wall_s"]
 
 
 # -- effects (what a task may yield) ----------------------------------------------
@@ -290,20 +310,112 @@ class SingleFlight:
         return h, True
 
 
-class EventLoop:
-    """The shared heap.  ``network`` (a Backbone) interprets ``Transfer``."""
+class _BinaryHeap:
+    """The original single binary heap, kept behind the ``engine="heap"``
+    knob as the reference pop order for the calendar queue."""
 
-    def __init__(self, network=None, *, trace: bool = False):
+    __slots__ = ("_h",)
+
+    def __init__(self):
+        self._h: list[tuple[float, int, TaskHandle, tuple[str, Any]]] = []
+
+    def __len__(self) -> int:
+        return len(self._h)
+
+    def push(self, item) -> None:
+        heapq.heappush(self._h, item)
+
+    def pop(self):
+        return heapq.heappop(self._h)
+
+
+class CalendarQueue:
+    """Calendar queue over simulated time: events bucket into fixed-width
+    *days* keyed by ``floor(t / width)``.
+
+    Keying days in a dict (instead of the classic modulo ring) makes
+    far-future timestamps safe — there is no year wrap to corrupt ordering,
+    a day materializes only when an event lands in it, and it is freed the
+    moment it drains.  Each day's bucket is heap-ordered by the full
+    ``(t_ms, seq, …)`` tuple and a small heap of day indices finds the next
+    nonempty day, so ``pop`` always returns the *global* ``(time, seq)``
+    minimum: the pop order is bit-identical to the single binary heap's,
+    which is what keeps every existing determinism digest unchanged.
+
+    Cost: O(1) expected per op while buckets stay small (they do when
+    ``width_ms`` is on the order of the mean event gap — sub-ms to a few ms
+    for this data plane); degrades gracefully toward plain heap behaviour
+    when everything lands in one day (zero-delay wake storms) or every
+    event gets its own day (sparse timers), never worse than O(log n).
+    """
+
+    __slots__ = ("width", "_days", "_day_heap", "_len")
+
+    def __init__(self, width_ms: float = 1.0):
+        if width_ms <= 0:
+            raise ValueError("calendar day width must be positive")
+        self.width = width_ms
+        # invariant: _day_heap holds exactly the keys of _days (no stale ids)
+        self._days: dict[int, list] = {}
+        self._day_heap: list[int] = []
+        self._len = 0
+
+    def __len__(self) -> int:
+        return self._len
+
+    def push(self, item) -> None:
+        day = int(item[0] // self.width)
+        bucket = self._days.get(day)
+        if bucket is None:
+            self._days[day] = bucket = []
+            heapq.heappush(self._day_heap, day)
+        heapq.heappush(bucket, item)
+        self._len += 1
+
+    def pop(self):
+        day = self._day_heap[0]  # IndexError on empty, like heappop
+        bucket = self._days[day]
+        item = heapq.heappop(bucket)
+        self._len -= 1
+        if not bucket:
+            del self._days[day]
+            heapq.heappop(self._day_heap)
+        return item
+
+
+class EventLoop:
+    """The shared event queue.  ``network`` (a Backbone) interprets
+    ``Transfer``; ``engine`` picks the queue discipline ("calendar", the
+    default, or the reference "heap") — both pop the exact same
+    ``(time, seq)`` order, so the choice never changes a digest."""
+
+    def __init__(self, network=None, *, trace: bool = False,
+                 engine: str | None = None):
         self.now = 0.0
         self.network = network
-        self._heap: list[tuple[float, int, TaskHandle, tuple[str, Any]]] = []
+        self.engine = engine or DEFAULT_ENGINE
+        if self.engine == "calendar":
+            self._q: CalendarQueue | _BinaryHeap = CalendarQueue()
+        elif self.engine == "heap":
+            self._q = _BinaryHeap()
+        else:
+            raise ValueError(f"engine must be calendar|heap, got {self.engine!r}")
         self._seq = itertools.count()
         self._resources: dict[Any, Resource] = {}
         self._tasks: list[TaskHandle] = []
         self._failures: list[TaskHandle] = []
+        # engine telemetry: events popped + wall-clock spent draining, the
+        # basis of ReplayResult.engine_events_per_sec
+        self.events_processed = 0
+        self.wall_s = 0.0
         # optional (t_ms, task label, step kind) record — the audit trail the
         # interleaving tests assert on
         self.trace: list[tuple[float, str, str]] | None = [] if trace else None
+
+    @property
+    def events_per_sec(self) -> float:
+        """Engine throughput of this loop's drains (0 before any run)."""
+        return self.events_processed / self.wall_s if self.wall_s > 0 else 0.0
 
     # -- resources -----------------------------------------------------------------
     def resource(self, key: Any, capacity: int = 1) -> Resource:
@@ -324,7 +436,7 @@ class EventLoop:
         return h
 
     def _push(self, t_ms: float, handle: TaskHandle, action: tuple[str, Any]) -> None:
-        heapq.heappush(self._heap, (t_ms, next(self._seq), handle, action))
+        self._q.push((t_ms, next(self._seq), handle, action))
 
     def _finish(self, h: TaskHandle, *, result: Any = None,
                 error: BaseException | None = None) -> None:
@@ -343,7 +455,8 @@ class EventLoop:
             self._failures.append(h)
 
     def _step(self) -> None:
-        t, _, h, (kind, value) = heapq.heappop(self._heap)
+        t, _, h, (kind, value) = self._q.pop()
+        self.events_processed += 1
         self.now = t
         if h.cancelled or h.done:
             return
@@ -415,8 +528,15 @@ class EventLoop:
         Raises the first exception of any task whose error was never
         delivered to a joiner, and flags deadlocks (tasks left suspended on
         a Join/Recv/Acquire that can never fire)."""
-        while self._heap:
-            self._step()
+        events0, t0 = self.events_processed, time.perf_counter()
+        try:
+            while self._q:
+                self._step()
+        finally:
+            dt = time.perf_counter() - t0
+            self.wall_s += dt
+            ENGINE_COUNTERS["wall_s"] += dt
+            ENGINE_COUNTERS["events"] += self.events_processed - events0
         for h in self._failures:
             if not h.error_delivered:
                 raise h.error
@@ -433,8 +553,15 @@ class EventLoop:
         raises its error).  Later events — e.g. straggler responses the
         caller stopped caring about — stay unprocessed, exactly like a real
         client abandoning in-flight RPCs."""
-        while not handle.done and self._heap:
-            self._step()
+        events0, t0 = self.events_processed, time.perf_counter()
+        try:
+            while not handle.done and self._q:
+                self._step()
+        finally:
+            dt = time.perf_counter() - t0
+            self.wall_s += dt
+            ENGINE_COUNTERS["wall_s"] += dt
+            ENGINE_COUNTERS["events"] += self.events_processed - events0
         if not handle.done:
             raise RuntimeError(
                 f"task {handle.label} never completed: event heap drained "

@@ -59,6 +59,10 @@ class ServedRange:
 class LatencyAwarePolicy:
     """Route to the node minimizing propagation + recent-latency EWMA."""
 
+    # routing depends on live fleet state (EWMA, routed counts): the cohort
+    # fast path cannot precompute it, so batches de-opt to task mode
+    static = False
+
     def pick(self, key: tuple[int, int], client: str | None, fleet: "RPCFleet") -> int:
         def est(i: int) -> tuple[float, int, int]:
             prop = 0.0
@@ -70,18 +74,40 @@ class LatencyAwarePolicy:
 
 
 class CacheAffinityPolicy:
-    """Rendezvous hashing on (blob_id, chunkset) -> stable home node."""
+    """Rendezvous hashing on (blob_id, chunkset) -> stable home node.
+
+    A pure function of (key, node set), so picks are memoized: a hot key
+    re-routed a million times costs one sha256 sweep, not a million — and
+    the cohort fast path can route whole batches through the same memo.
+    """
+
+    static = True  # pick depends only on (key, node set): vectorizable
+
+    def __init__(self):
+        self._memo: dict[tuple[int, int], int] = {}
+        self._memo_nodes: object = None  # fleet.node_ids identity the memo is valid for
 
     def pick(self, key: tuple[int, int], client: str | None, fleet: "RPCFleet") -> int:
+        if fleet.node_ids is not self._memo_nodes:
+            self._memo.clear()
+            self._memo_nodes = fleet.node_ids
+        hit = self._memo.get(key)
+        if hit is not None:
+            return hit
+
         def weight(i: int) -> bytes:
             tag = f"{fleet.node_ids[i]}|{key[0]}|{key[1]}".encode()
             return hashlib.sha256(tag).digest()
 
-        return max(range(len(fleet.rpcs)), key=weight)
+        best = max(range(len(fleet.rpcs)), key=weight)
+        self._memo[key] = best
+        return best
 
 
 class PowerOfTwoPolicy:
     """Two seeded random probes, pick the less-loaded (routed count)."""
+
+    static = False  # consumes an rng stream in routing order
 
     def __init__(self, seed: int = 0):
         self._rng = np.random.default_rng(seed)

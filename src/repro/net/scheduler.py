@@ -32,9 +32,12 @@ from repro.net.events import Channel, EventLoop, Recv, Sleep
 _HEDGE = object()  # sentinel message the deadline timer posts
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class FetchResult:
-    """Outcome of one k-of-n hedged fetch on the simulated clock."""
+    """Outcome of one k-of-n hedged fetch on the simulated clock.
+
+    ``slots=True``: a big-world replay materializes one of these per
+    chunkset fetch, so the per-object footprint is kept to the fields."""
 
     shards: dict[int, object]  # candidate key -> payload (first k valid)
     latency_ms: float  # sim time at which the k-th valid shard landed

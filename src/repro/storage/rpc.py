@@ -169,7 +169,7 @@ class SampledShare:
         return self.share_bytes + self.proof_bytes
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, slots=True)
 class ItemStats:
     """Per-(blob, chunkset) outcome of one `read_items_detailed` call."""
 
@@ -339,6 +339,10 @@ class RPCNode:
         self._admitted = 0  # reads between admission and final decode
         self._inflight_fetches = 0  # live chunkset fetch tasks toward SPs
         self._ewma_fetch_ms: float | None = None  # congestion signal
+        # fast-path instrumentation: when a dict is assigned here, every
+        # _cache_put records the FIRST sim time each key became servable
+        # from cache — the cohort classifier's hit/coalesce boundary
+        self.cache_put_log: dict[tuple, float] | None = None
         self.stats = ReadStats()
         contract.register_rpc(rpc_id)
 
@@ -560,6 +564,8 @@ class RPCNode:
             return  # admission: oversized objects would evict the whole hot set
         expires = None if self.cache_ttl_ms is None else now_ms + self.cache_ttl_ms
         version = self.contract.placement_version.get(key, 0)
+        if self.cache_put_log is not None and key not in self.cache_put_log:
+            self.cache_put_log[key] = now_ms
         self._cache[key] = (decoded, expires, version)
         self._cache.move_to_end(key)
         if len(self._cache) > self._cache_size:

@@ -1,0 +1,361 @@
+"""Engine equivalence: the calendar queue, the cohort fast path, and
+batched settlement must be *invisible* to every determinism digest.
+
+Three families of bars:
+
+* ``CalendarQueue`` vs ``_BinaryHeap`` pop-order identity — a seeded
+  hand-rolled property sweep (hypothesis is not in the image) over random
+  push/pop interleavings with exact-time ties, far-future timestamps, and
+  zero-delay self-wakes, plus digest equality of full replays across the
+  workload families (zipf streaming, DAS storm, membership churn,
+  background planes) with ``engine="heap"`` vs ``engine="calendar"``.
+* ``replay_open_loop_fast`` vs task-per-request replay — byte-identical
+  digests and identical fleet/node counters on the single-chunkset worlds
+  the fast path guarantees float-exactness for, and loud, reasoned
+  fallbacks everywhere else.
+* Batched settlement — one-debit-per-node cohort payments conserve value
+  against the per-receipt task path and the contract's realized incomes.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.contract import ShelbyContract
+from repro.core.placement import SPInfo
+from repro.net.backbone import Backbone
+from repro.net.events import CalendarQueue, EventLoop, _BinaryHeap
+from repro.net.fastpath import fastpath_fallback_reason, replay_open_loop_fast
+from repro.net.fleet import CacheAffinityPolicy, RPCFleet
+from repro.net.workloads import (
+    das_storm,
+    replay_open_loop,
+    zipf_hotset,
+    zipf_hotset_batch,
+)
+from repro.core import audit as audit_mod
+from repro.storage.background import AuditPlane, RepairPlane
+from repro.storage.blob import BlobLayout
+from repro.storage.das import DASSpec, extend_and_disperse_many
+from repro.storage.membership import ChurnSpec, MembershipPlane
+from repro.storage.repair import RepairCoordinator
+from repro.storage.rpc import AdmissionSpec, BackboneTransport, RPCNode
+from repro.storage.sdk import ShelbyClient
+from repro.storage.sp import BackgroundSpec, ServiceSpec, StorageProvider
+
+
+# ---------------------------------------------------------------------------
+# calendar queue vs binary heap: pop-order identity (property sweep)
+# ---------------------------------------------------------------------------
+def _drain_equal(items, *, width_ms=1.0):
+    """Push the same items into both disciplines, pop everything, and
+    assert the sequences are identical element-for-element."""
+    cal, heap = CalendarQueue(width_ms=width_ms), _BinaryHeap()
+    for it in items:
+        cal.push(it)
+        heap.push(it)
+    assert len(cal) == len(heap) == len(items)
+    got = [cal.pop() for _ in range(len(items))]
+    want = [heap.pop() for _ in range(len(items))]
+    assert got == want
+    assert len(cal) == 0
+    with pytest.raises(IndexError):  # empty-pop contract matches heappop
+        cal.pop()
+
+
+@pytest.mark.parametrize("seed", range(8))
+@pytest.mark.parametrize("width_ms", [0.25, 1.0, 16.0])
+def test_calendar_pop_order_matches_heap_property_sweep(seed, width_ms):
+    """Seeded stand-in for a hypothesis property test: random (t, seq)
+    streams with heavy exact-time ties and day-boundary times."""
+    rng = np.random.default_rng(seed)
+    n = 400
+    # a small palette of times forces many exact ties; day-boundary
+    # multiples of width land items right on bucket edges
+    palette = np.concatenate([
+        rng.uniform(0.0, 50.0, 8),
+        np.arange(6) * width_ms,           # exact day boundaries
+        [0.0, 0.0, 13.125],                # repeated zeros: tie storms
+    ])
+    ts = rng.choice(palette, n)
+    seqs = rng.permutation(n)  # unique seqs, shuffled vs time order
+    items = [(float(t), int(s), f"task{s}") for t, s in zip(ts, seqs)]
+    _drain_equal(items, width_ms=width_ms)
+
+
+def test_calendar_interleaved_push_pop_matches_heap():
+    """Pops interleave with pushes (as a live loop does): after each pop
+    both disciplines must agree, including pushes at the just-popped time
+    (zero-delay self-wakes land in the current day)."""
+    rng = np.random.default_rng(42)
+    cal, heap = CalendarQueue(), _BinaryHeap()
+    seq = 0
+    now = 0.0
+    for _ in range(200):
+        for _ in range(rng.integers(1, 4)):
+            t = now + float(rng.exponential(2.0))
+            if rng.random() < 0.3:
+                t = now  # zero-delay self-wake: same time, later seq
+            cal.push((t, seq, None))
+            heap.push((t, seq, None))
+            seq += 1
+        if len(heap) and rng.random() < 0.8:
+            a, b = cal.pop(), heap.pop()
+            assert a == b
+            now = a[0]
+    while len(heap):
+        assert cal.pop() == heap.pop()
+
+
+def test_calendar_far_future_and_sparse_days():
+    """Dict-keyed days: timestamps out at 1e12 ms (a classic modulo-ring
+    year wrap hazard) order correctly against near-term events, and
+    all-sparse streams (every event its own day) stay exact."""
+    items = [(1e12, 1, "far"), (0.0, 0, "now"), (1e12, 0, "far-tie"),
+             (5e11 + 0.5, 2, "mid"), (1e12 + 1e-9, 3, "epsilon-later")]
+    _drain_equal(items)
+    sparse = [(float(i) * 1e6, i, None) for i in range(64)][::-1]
+    _drain_equal(sparse)
+
+
+def test_calendar_rejects_nonpositive_width():
+    with pytest.raises(ValueError):
+        CalendarQueue(width_ms=0.0)
+
+
+# ---------------------------------------------------------------------------
+# heap vs calendar digests across the workload families
+# ---------------------------------------------------------------------------
+def _bb_world(*, num_sps=9, num_rpcs=2, cache=8, seed=0, num_blobs=4,
+              blob_bytes=150_000, crash_sp=None, single_flight=True):
+    layout = BlobLayout(k=4, m=2, chunkset_bytes_target=64 * 1024)
+    contract = ShelbyContract()
+    bb = Backbone.mesh(3, base_latency_ms=4.0, gbps=10.0)
+    sps = {}
+    for i in range(num_sps):
+        dc = f"dc{i % 3}"
+        contract.register_sp(SPInfo(sp_id=i, stake=1000.0, dc=dc, rack=f"r{i % 4}"))
+        sps[i] = StorageProvider(i, service=ServiceSpec(
+            disk_ms_per_chunk=1.0, slots=2, background=BackgroundSpec()))
+        bb.register_node(f"sp{i}", dc)
+    rpcs = []
+    for r in range(num_rpcs):
+        node = f"rpc{r}"
+        bb.register_node(node, f"dc{r % 3}")
+        rpcs.append(RPCNode(node, contract, sps, layout, cache_chunksets=cache,
+                            transport=BackboneTransport(sps, bb, node),
+                            single_flight=single_flight))
+    bb.register_node("client", "dc0")
+    bb.register_node("repairer", "dc1")
+    fleet = RPCFleet(rpcs, CacheAffinityPolicy(), backbone=bb)
+    client = ShelbyClient(contract, fleet, deposit=1e9)
+    rng = np.random.default_rng(seed)
+    metas = [client.put(rng.integers(0, 256, blob_bytes, dtype=np.uint8).tobytes())
+             for _ in range(num_blobs)]
+    if crash_sp is not None:
+        sps[crash_sp].crash()  # after the writes: its chunks are repair work
+    return layout, contract, bb, sps, fleet, client, metas
+
+
+def _family_zipf(engine):
+    *_, fleet, _, metas = _bb_world()
+    reqs = zipf_hotset(metas, clients=["client"], num_requests=80,
+                       interarrival_ms=2.0, seed=3, arrival="poisson")
+    return replay_open_loop(fleet, reqs, engine=engine).digest()
+
+
+def _family_das(engine):
+    layout, contract, _, sps, fleet, client, metas = _bb_world()
+    spec = DASSpec(k=4, share_bytes=512, samples_per_epoch=8)
+    rng = np.random.default_rng(1)
+    records = extend_and_disperse_many(
+        contract, sps,
+        [(m.blob_id, rng.integers(0, 256, 4096, dtype=np.uint8).tobytes())
+         for m in metas[:2]],
+        spec,
+    )
+    reqs = das_storm(records, clients=["client"], num_requests=60, seed=9,
+                     interarrival_ms=1.0)
+    reader = ShelbyClient(contract, fleet, deposit=1e9, das=spec)
+    with reader.session() as session:
+        _, result = session.replay(reqs, engine=engine)
+    return result.digest()
+
+
+def _family_churn(engine):
+    layout, contract, _, sps, fleet, client, metas = _bb_world(num_sps=10)
+    rc = RepairCoordinator(contract, sps, layout)
+    plane = MembershipPlane(
+        contract, sps, layout,
+        ChurnSpec(p_crash=0.1, p_leave=0.1, joins_per_epoch=1, seed=4),
+        repair=rc, fleet=fleet, epochs=2, epoch_ms=60.0,
+    )
+    reqs = zipf_hotset(metas, clients=["client"], num_requests=40,
+                       interarrival_ms=3.0, seed=8, arrival="poisson")
+    with client.session() as session:
+        _, result = session.replay(reqs, background=plane.planes(),
+                                   engine=engine)
+    return result.digest()
+
+
+def _family_background(engine):
+    layout, contract, _, sps, fleet, _, metas = _bb_world(crash_sp=5)
+    sp_nodes = {i: f"sp{i}" for i in sps}
+    sp_ids = [s.sp_id for s in contract.active_sps()]
+    challenges = audit_mod.derive_challenges(
+        contract.epoch_seed(0), 0, contract.holdings(), sp_ids,
+        p_a=1.0, auditors_per_audit=3,
+    )
+    audits = AuditPlane(contract, sps, challenges, nodes=sp_nodes)
+    rc = RepairCoordinator(contract, sps, layout, nodes=sp_nodes,
+                           coordinator_node="repairer")
+    reqs = zipf_hotset(metas, clients=["client"], num_requests=50,
+                       interarrival_ms=2.0, seed=3, arrival="poisson")
+    return replay_open_loop(fleet, reqs,
+                            background=[audits, RepairPlane(rc)],
+                            engine=engine).digest()
+
+
+@pytest.mark.parametrize("family", [
+    _family_zipf, _family_das, _family_churn, _family_background,
+], ids=["zipf_streaming", "das_storm", "membership_churn", "background_planes"])
+def test_heap_and_calendar_digests_identical(family):
+    assert family("heap") == family("calendar")
+
+
+def test_default_engine_is_calendar():
+    assert EventLoop().engine == "calendar"
+    # an unknown discipline fails loudly, not silently-heap
+    with pytest.raises(ValueError):
+        EventLoop(engine="fibonacci")
+
+
+# ---------------------------------------------------------------------------
+# cohort fast path vs task-per-request replay
+# ---------------------------------------------------------------------------
+def _fast_world(*, num_rpcs=2, cache=64, admission=None):
+    """Single-chunkset blobs + whole-blob reads: the float-exact regime."""
+    layout = BlobLayout(k=4, m=2, chunkset_bytes_target=64 * 1024)
+    contract = ShelbyContract()
+    bb = Backbone.mesh(3, base_latency_ms=4.0, gbps=10.0)
+    sps = {}
+    for i in range(8):
+        dc = f"dc{i % 3}"
+        contract.register_sp(SPInfo(sp_id=i, stake=1000.0, dc=dc, rack=f"r{i % 4}"))
+        sps[i] = StorageProvider(i, service=ServiceSpec(disk_ms_per_chunk=0.5,
+                                                        slots=4))
+        bb.register_node(f"sp{i}", dc)
+    rpcs = []
+    for r in range(num_rpcs):
+        node = f"rpc{r}"
+        bb.register_node(node, f"dc{r % 3}")
+        rpcs.append(RPCNode(node, contract, sps, layout, cache_chunksets=cache,
+                            transport=BackboneTransport(sps, bb, node),
+                            admission=admission))
+    bb.register_node("client", "dc0")
+    fleet = RPCFleet(rpcs, CacheAffinityPolicy(), backbone=bb)
+    client = ShelbyClient(contract, fleet, deposit=1e9)
+    rng = np.random.default_rng(7)
+    metas = [client.put(rng.integers(0, 256, 50_000, dtype=np.uint8).tobytes())
+             for _ in range(12)]
+    for n in rpcs:
+        n._cache.clear()  # cold start: the PUT path warmed the writer's cache
+    return fleet, client, metas
+
+
+def _fast_batch(metas, n=1500, seed=3):
+    return zipf_hotset_batch(metas, clients=["client"], num_requests=n,
+                             read_bytes=64 * 1024, interarrival_ms=0.2,
+                             seed=seed, arrival="poisson")
+
+
+def test_fast_path_digest_and_counters_match_task_mode():
+    fleet_t, _, metas = _fast_world()
+    batch = _fast_batch(metas)
+    r_task = replay_open_loop(fleet_t, batch.to_requests())
+
+    fleet_f, _, _ = _fast_world()
+    r_fast = replay_open_loop_fast(fleet_f, batch)
+
+    assert r_fast.cohort.fallback_reason is None
+    assert r_fast.cohort.vec_requests > 0
+    assert r_fast.cohort.deopt_requests > 0  # cold keys de-opted to tasks
+    assert r_task.digest() == r_fast.digest()
+    # the digest covers per-request rows; the fleet/node books must agree too
+    assert fleet_t.routed == fleet_f.routed
+    assert fleet_t.chunkset_reads == fleet_f.chunkset_reads
+    assert fleet_t.bytes_served == fleet_f.bytes_served
+    assert ([n.stats.cache_hits for n in fleet_t.rpcs]
+            == [n.stats.cache_hits for n in fleet_f.rpcs])
+    assert ([n.stats.coalesced for n in fleet_t.rpcs]
+            == [n.stats.coalesced for n in fleet_f.rpcs])
+    assert (sorted(fleet_t.request_latencies_ms)
+            == sorted(fleet_f.request_latencies_ms))
+
+
+def test_fast_path_is_deterministic_across_replays():
+    _, _, metas = _fast_world()
+    batch = _fast_batch(metas)
+    digests = set()
+    for _ in range(2):
+        fleet, _, _ = _fast_world()
+        digests.add(replay_open_loop_fast(fleet, batch).digest())
+    assert len(digests) == 1
+
+
+def test_fast_path_falls_back_with_a_reason():
+    # admission control individuates requests -> whole batch de-opts
+    fleet, _, metas = _fast_world(
+        admission=AdmissionSpec(max_queued_requests=64))
+    batch = _fast_batch(metas, n=200)
+    reason = fastpath_fallback_reason(fleet, batch)
+    assert reason is not None and "admission" in reason
+    res = replay_open_loop_fast(fleet, batch)
+    assert res.cohort.fallback_reason == reason
+    assert res.cohort.vec_requests == 0
+    assert res.cohort.deopt_requests == len(batch)
+    # the fallback replay is the task path: digest matches it exactly
+    fleet_t, _, _ = _fast_world(
+        admission=AdmissionSpec(max_queued_requests=64))
+    assert res.digest() == replay_open_loop(fleet_t, batch.to_requests()).digest()
+
+
+def test_fast_path_fallback_on_stateful_policy():
+    from repro.net.fleet import PowerOfTwoPolicy
+
+    fleet, _, metas = _fast_world()
+    fleet.policy = PowerOfTwoPolicy()
+    reason = fastpath_fallback_reason(fleet, _fast_batch(metas, n=50))
+    assert reason is not None and "stateful" in reason
+
+
+# ---------------------------------------------------------------------------
+# batched settlement conservation
+# ---------------------------------------------------------------------------
+def test_batched_settlement_conserves_value_vs_task_path():
+    fleet_t, client_t, metas = _fast_world()
+    batch = _fast_batch(metas, n=1000, seed=11)
+    with client_t.session(deposit_per_node=1e6) as s_task:
+        _, r_task = s_task.replay(batch.to_requests())
+        paid_task = s_task.total_paid
+    set_task = s_task.settlement
+
+    fleet_f, client_f, _ = _fast_world()
+    with client_f.session(deposit_per_node=1e6) as s_fast:
+        rb, r_fast = s_fast.replay(batch)
+        paid_fast = s_fast.total_paid
+    set_fast = s_fast.settlement
+
+    assert r_task.digest() == r_fast.digest()
+    assert len(rb) == r_fast.cohort.vec_requests
+    # value conservation: batched one-debit-per-node totals equal the task
+    # path's per-receipt debits, node by node
+    assert paid_fast == pytest.approx(paid_task, rel=1e-9)
+    for nid, income in set_task.node_income.items():
+        assert set_fast.node_income.get(nid, 0.0) == pytest.approx(income,
+                                                                   rel=1e-9)
+    # the cohort's recorded debits are exactly what the channels saw
+    assert (rb.total_paid + sum(r.total_paid for r in s_fast.receipts)
+            == pytest.approx(set_fast.total_node_income, abs=1e-9))
+    assert np.all(rb.paid > 0.0)
+    assert np.all(rb.latency_ms >= 0.0)
