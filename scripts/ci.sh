@@ -1,18 +1,22 @@
 #!/usr/bin/env bash
-# CI gate: lint + tier-1 tests + a time-budgeted smoke pass of the serving
-# benchmarks.  Exits nonzero on regression-shaped failures: lint errors,
-# test failures, benchmark assertion bars (p99 shielded from stragglers,
-# bounded admitted p99 + nonzero shed rate past saturation, 40 Mbps 4K
-# bar), or blowing a smoke time budget (exit 124 is reported as exactly
+# CI gate: lint + tier-1 tests + catalog freshness + a time-budgeted smoke
+# pass of every registered scenario.  Exits nonzero on regression-shaped
+# failures: lint errors, test failures, a stale scenario catalog, scenario
+# SLO violations (p99 shielded from stragglers, bounded admitted p99 +
+# nonzero shed rate past saturation, zero lost chunksets, ...), the 40 Mbps
+# 4K bar, or blowing a smoke time budget (exit 124 is reported as exactly
 # that, so the log says WHICH budget blew, not just "tests failed").
 #
-#   scripts/ci.sh                 # default 600 s benchmark budget
-#   SMOKE_BUDGET_S=120 scripts/ci.sh
+#   scripts/ci.sh                      # registry budgets per scenario
+#   SCENARIO_BUDGET_SCALE=2 scripts/ci.sh   # slow runner: double budgets
 #
-# Benchmark metrics are also written to ${BENCH_JSON:-BENCH_backbone.json}
-# (machine-readable; the GitHub Actions workflow uploads it as an artifact
-# so the bench trajectory is tracked across PRs instead of scraped from
-# stdout).
+# Scenario budgets live ON the registry entries (budget_s in
+# src/repro/scenarios/*.py); the loop below reads them via
+# `python -m repro.scenarios budgets` and SCENARIO_BUDGET_SCALE scales
+# them uniformly.  Benchmark metrics are written to
+# ${BENCH_JSON:-BENCH_backbone.json} (machine-readable; the GitHub Actions
+# workflow uploads it as an artifact so the bench trajectory is tracked
+# across PRs instead of scraped from stdout).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
@@ -50,60 +54,30 @@ echo "== tier-1: pytest =="
 python -m pytest -q \
     --deselect tests/test_sharding.py::test_distributed_equivalence_8dev
 
+echo "== scenario catalog freshness =="
+# docs/CATALOG.md is generated from the registry + the COMMITTED bench
+# sidecar; this gate runs BEFORE the smokes below rewrite $BENCH_JSON so
+# freshness is always judged against what is committed
+python scripts/gen_scenario_catalog.py --check
+
 # NOTE: no `rm -f "$BENCH_JSON"` here — emit_json merges sections
 # read-modify-write, so a pre-existing sidecar (earlier partial run, a
 # caller accumulating several suites into one file) keeps its other
 # sections instead of being clobbered; corrupt files are tolerated and
-# rewritten atomically by benchmarks/common.py.
-echo "== benchmark smoke (budget: ${SMOKE_BUDGET_S:-600}s) =="
-BACKBONE_SMOKE=1 run_budgeted "${SMOKE_BUDGET_S:-600}" "serving benchmarks" \
-    python -m benchmarks.run backbone_serve read_throughput
+# rewritten atomically by repro.scenarios.report.
+echo "== scenario smokes (registry budgets x SCENARIO_BUDGET_SCALE=${SCENARIO_BUDGET_SCALE:-1.0}) =="
+# every registered scenario runs headless at smoke size: the runner
+# resolves its knobs, replays its workload, asserts its declared SLOs
+# (violations name the scenario), and merges its section into $BENCH_JSON
+python -m repro.scenarios budgets | while read -r name budget; do
+    echo "-- scenario: $name (budget: ${budget}s) --"
+    BACKBONE_SMOKE=1 run_budgeted "$budget" "scenario $name" \
+        python -m repro.scenarios run "$name"
+done
 
-echo "== concurrent-workload smoke (budget: ${CONCURRENT_BUDGET_S:-180}s) =="
-# open-loop Poisson zipf storm on the SHARED event engine: asserts the
-# determinism digest (two identical runs -> byte-identical per-request
-# timings + link utilization), then ramps offered load with and without
-# admission control — the free-running fleet's p99 must blow up past the
-# knee while the admitted fleet sheds (nonzero shed rate), keeps p99
-# bounded below it, and single-flight dedup collapses the hot set
-BACKBONE_SMOKE=1 run_budgeted "${CONCURRENT_BUDGET_S:-180}" "concurrent ramp" \
-    python -m benchmarks.backbone_serve concurrent
-
-echo "== background-plane smoke (budget: ${BACKGROUND_BUDGET_S:-180}s) =="
-# audits + repair as paced background tasks on the SAME event loop as a
-# paid Poisson storm: asserts serving p99 inflation stays within the
-# configured background budget, that no foreground read is starved, and
-# that audit-proof/repair bytes actually land on NIC/trunk counters
-BACKBONE_SMOKE=1 run_budgeted "${BACKGROUND_BUDGET_S:-180}" "background planes" \
-    python -m benchmarks.backbone_serve background
-
-echo "== membership-churn smoke (budget: ${CHURN_BUDGET_S:-240}s) =="
-# epoch-scale churn under a live storm: scripted departures/crashes/joins,
-# boundary reconfigurations, and the re-dispersal backlog draining within
-# the configured budget — asserts zero loss at tolerable churn, bit-exact
-# decode through the SAME fleet, bounded p99 through the change, the
-# monotone measured-durability series, and same-seed digest equality
-BACKBONE_SMOKE=1 run_budgeted "${CHURN_BUDGET_S:-240}" "membership churn" \
-    python -m benchmarks.backbone_serve churn
-
-echo "== DAS-sampling smoke (budget: ${DAS_BUDGET_S:-180}s) =="
-# the proof-carrying light-client read regime: measured withholding
-# detection on the analytic 1-(1-q)^s curve (seeded exact-count
-# adversaries, zero-withholding control), detection cheaper in bytes than
-# a full-chunk audit, and a cache-hostile uniform sample storm riding the
-# event engine concurrently with streaming — cache_bypass keeps the
-# streaming hit rate intact, p99 stays in budget, digests replay equal
-BACKBONE_SMOKE=1 run_budgeted "${DAS_BUDGET_S:-180}" "das sampling" \
-    python -m benchmarks.backbone_serve das
-
-echo "== engine-scale smoke (budget: ${ENGINE_BUDGET_S:-420}s) =="
-# the million-request ramp: 10k -> 100k -> 1M requests against a 500-SP /
-# 50-RPC world through the cohort fast path — asserts the fast digest is
-# deterministic and byte-identical to task mode at 10k, >= 10x engine
-# events/sec over the binary-heap task baseline at 100k, and that the 1M
-# world completes inside the budget
-BACKBONE_SMOKE=1 run_budgeted "${ENGINE_BUDGET_S:-420}" "engine scale" \
-    python -m benchmarks.engine_scale
+echo "== read-throughput smoke (budget: ${SMOKE_BUDGET_S:-600}s) =="
+BACKBONE_SMOKE=1 run_budgeted "${SMOKE_BUDGET_S:-600}" "read throughput" \
+    python -m benchmarks.run read_throughput
 
 echo "== streaming smoke: video through BlobReader (budget: ${VIDEO_BUDGET_S:-120}s) =="
 # exercises the session API end to end: open/stream receipts, pay-on-delivery,
@@ -118,7 +92,7 @@ path = os.environ["BENCH_JSON"]
 with open(path) as f:
     doc = json.load(f)
 for section in ("serve_grid", "concurrent_ramp", "background", "churn", "das",
-                "engine"):
+                "tune_admission", "engine"):
     assert section in doc, f"{path} missing section {section!r}"
 print(f"{path}: {', '.join(sorted(doc))} OK")
 EOF

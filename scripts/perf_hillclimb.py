@@ -1,93 +1,121 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""SLO auto-tuning driver: sweep / hill-climb a scenario's knob space.
 
-"""§Perf hillclimb driver: run tagged variants of the three chosen pairs,
-re-lower + re-analyze, and append records to results/perf/.
+    PYTHONPATH=src python scripts/perf_hillclimb.py tune_admission
+    PYTHONPATH=src python scripts/perf_hillclimb.py tune_admission --sweep
+    PYTHONPATH=src python scripts/perf_hillclimb.py concurrent \
+        --objective 5000rps.admitted.goodput_mbps \
+        --axis rpc_max_inflight_fetches=4,6,8,12
 
-  PYTHONPATH=src python scripts/perf_hillclimb.py <variant-name>
+Searches the named scenario's knob space for "max <objective> s.t. the
+scenario's declared SLOs hold" via ``repro.scenarios.sweep``
+(coordinate-descent hill-climb by default, exhaustive grid with
+``--sweep``).  Every evaluated point runs headless with ``emit=False``
+— searched points never touch BENCH_backbone.json — and records its
+deterministic replay digest, so any number in the tuning report can be
+reproduced bit-for-bit by re-running that scenario at those knobs.
 
-Variants encode one hypothesis each (see EXPERIMENTS.md §Perf)."""
+Without ``--axis``, axes default to :data:`DEFAULT_AXES` for the
+scenario (curated candidate lists around each registered default).
+Results land in ``results/perf/<scenario>_tune.json``.
+"""
+from __future__ import annotations
+
+import argparse
 import json
 import pathlib
 import sys
 
-import jax
-
-from repro.launch.dryrun import run_cell
+from repro.scenarios import REGISTRY, KnobAxis, ScenarioProblem, load_builtin
 
 OUT = pathlib.Path("results/perf")
 
-VARIANTS = {
-    # --- granite-8b / train_4k (representative pair) -------------------------
-    "granite_base": dict(arch="granite-8b", shape_name="train_4k", mesh_kind="single"),
-    # H1: reduce-scatter grad accumulation instead of 8x full all-reduce
-    "granite_gradshard": dict(arch="granite-8b", shape_name="train_4k", mesh_kind="single",
-                              shard_grad_accum=True),
-    # H2: + save dot outputs in remat (less recompute traffic)
-    "granite_gradshard_dots": dict(arch="granite-8b", shape_name="train_4k", mesh_kind="single",
-                                   shard_grad_accum=True,
-                                   remat_policy="dots"),
-    # H3: + sequence-parallel activations (stored carries / norms sharded)
-    "granite_gradshard_seq": dict(arch="granite-8b", shape_name="train_4k", mesh_kind="single",
-                                  shard_grad_accum=True,
-                                  rules_override={"seq": ("model",)}),
-    # H4: fewer microbatches (4 instead of 8): fewer grad reductions
-    "granite_gradshard_mb4": dict(arch="granite-8b", shape_name="train_4k", mesh_kind="single",
-                                  shard_grad_accum=True, microbatch_override=4),
+# Curated default search spaces.  Candidates bracket the registered
+# default (include it explicitly: the search must be free to keep it).
+DEFAULT_AXES = {
+    "tune_admission": (
+        KnobAxis("rpc_single_flight", (False, True)),
+        KnobAxis("rpc_max_inflight_fetches", (None, 3, 6, 12, 24)),
+        KnobAxis("rpc_shed_deadline_ms", (None, 100.0, 200.0)),
+        KnobAxis("rpc_hedge_deadline_factor", (2.0, 3.0, 5.0)),
+    ),
+}
 
-    # --- command-r-plus-104b / decode_32k (most collective-bound) ------------
-    "cr_decode_base": dict(arch="command-r-plus-104b", shape_name="decode_32k",
-                           mesh_kind="single"),
-    # H1: weights TP-only over 'model' (row-parallel partial sums) instead of
-    # 2D ('data','model') sharding that makes XLA gather 400 GB of weights
-    "cr_decode_tp": dict(arch="command-r-plus-104b", shape_name="decode_32k",
-                         mesh_kind="single",
-                         rules_override={"embed": ("model",), "vocab": ("model",),
-                                         "expert_embed": None}),
-    # H2: TP weights + batch over data only (pod axis free for batch in multi)
-    "cr_decode_tp_multi": dict(arch="command-r-plus-104b", shape_name="decode_32k",
-                               mesh_kind="multi",
-                               rules_override={"embed": ("model",), "vocab": ("model",),
-                                               "expert_embed": None}),
-
-    # --- hymba-1.5b / prefill_32k (worst roofline fraction) ------------------
-    "hymba_prefill_base": dict(arch="hymba-1.5b", shape_name="prefill_32k",
-                               mesh_kind="single"),
-    # H1: sequence parallelism — shard the 32k seq dim over 'model' so the
-    # replicated-25-head attention and SSM activations split 16 ways
-    "hymba_prefill_seq": dict(arch="hymba-1.5b", shape_name="prefill_32k",
-                              mesh_kind="single",
-                              rules_override={"seq": ("model",)}),
-    # H2: seq-sharding + ssm_inner over model (default) is kept; also shard
-    # the flash-attn kv chunk bigger via rules? (structural no-op) — instead
-    # try batch over ('pod','data') + seq over 'model' with heads replicated
-    "hymba_prefill_seq_b": dict(arch="hymba-1.5b", shape_name="prefill_32k",
-                                mesh_kind="single",
-                                rules_override={"seq": ("model",), "embed": None}),
+DEFAULT_OBJECTIVE = {
+    "tune_admission": "goodput_mbps",
 }
 
 
-def main():
-    OUT.mkdir(parents=True, exist_ok=True)
-    names = sys.argv[1:] or list(VARIANTS)
-    for name in names:
-        kw = dict(VARIANTS[name])
-        if kw.get("remat_policy") == "dots":
-            kw["remat_policy"] = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
-        path = OUT / f"{name}.json"
-        if path.exists():
-            print(f"[{name}] cached")
+def _parse_value(tok: str):
+    if tok in ("None", "none", "null"):
+        return None
+    if tok in ("True", "true"):
+        return True
+    if tok in ("False", "false"):
+        return False
+    for cast in (int, float):
+        try:
+            return cast(tok)
+        except ValueError:
             continue
-        print(f"[{name}] running...", flush=True)
-        rec = run_cell(tag=name, **{k: v for k, v in kw.items()})
-        rec.pop("traceback", None)
-        path.write_text(json.dumps(rec, indent=1))
-        if rec["status"] == "ok":
-            print(f"[{name}] ok: flops={rec['hlo_flops']:.3e} bytes={rec['hlo_bytes']:.3e} "
-                  f"coll_wire={rec['collective_wire_bytes']:.3e}")
-        else:
-            print(f"[{name}] {rec['status']}: {rec.get('error','')}")
+    return tok
+
+
+def _parse_axis(spec: str) -> KnobAxis:
+    name, _, csv = spec.partition("=")
+    if not csv:
+        raise SystemExit(f"--axis wants name=v1,v2,...; got {spec!r}")
+    return KnobAxis(name, tuple(_parse_value(t) for t in csv.split(",")))
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        description="sweep/hill-climb a scenario's knobs against its SLOs")
+    parser.add_argument("scenario", help="registered scenario name")
+    parser.add_argument("--objective", default=None,
+                        help="dotted payload path to maximize")
+    parser.add_argument("--minimize", action="store_true")
+    parser.add_argument("--axis", action="append", default=[],
+                        metavar="KNOB=V1,V2,...",
+                        help="searched axis (repeatable); defaults to the "
+                             "curated DEFAULT_AXES for the scenario")
+    parser.add_argument("--sweep", action="store_true",
+                        help="exhaustive grid instead of hill-climb")
+    parser.add_argument("--full", action="store_true",
+                        help="full-size traffic (default: smoke-size runs)")
+    parser.add_argument("--out", default=None, help="result JSON path")
+    args = parser.parse_args(argv)
+
+    load_builtin()
+    scenario = REGISTRY.get(args.scenario)
+    axes = tuple(_parse_axis(s) for s in args.axis)
+    if not axes:
+        axes = DEFAULT_AXES.get(scenario.name)
+        if axes is None:
+            raise SystemExit(
+                f"no default axes for {scenario.name!r} "
+                f"(tunable: {list(scenario.tunable)}); give --axis"
+            )
+    objective = args.objective or DEFAULT_OBJECTIVE.get(scenario.name)
+    if objective is None:
+        raise SystemExit(f"no default objective for {scenario.name!r}; "
+                         f"give --objective (headline paths: "
+                         f"{list(scenario.headline)})")
+
+    problem = ScenarioProblem(scenario, axes, objective,
+                              maximize=not args.minimize,
+                              smoke=not args.full)
+    result = problem.sweep() if args.sweep else problem.hill_climb()
+
+    OUT.mkdir(parents=True, exist_ok=True)
+    out = pathlib.Path(args.out) if args.out else OUT / f"{scenario.name}_tune.json"
+    result.dump(out)
+    doc = result.to_json()
+    print(json.dumps({k: doc[k] for k in
+                      ("scenario", "objective", "evaluations",
+                       "baseline", "best", "improved")}, indent=2))
+    print(f"# wrote {out}")
+    return 0 if result.best.feasible else 1
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

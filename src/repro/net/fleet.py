@@ -120,6 +120,28 @@ class PowerOfTwoPolicy:
         return int(a if fleet.routed[a] <= fleet.routed[b] else b)
 
 
+# named policy factories: the routing_policy config knob and the scenario
+# registry resolve policies by these names (fresh instance per fleet —
+# policies carry per-fleet state: memos, rng streams, EWMA views)
+POLICY_FACTORIES = {
+    "latency": LatencyAwarePolicy,
+    "affinity": CacheAffinityPolicy,
+    "p2c": lambda: PowerOfTwoPolicy(seed=0),
+}
+
+
+def make_policy(name: str):
+    """A fresh routing-policy instance for a registered name."""
+    try:
+        factory = POLICY_FACTORIES[name]
+    except KeyError:
+        raise ValueError(
+            f"routing_policy must be one of {sorted(POLICY_FACTORIES)}, "
+            f"got {name!r}"
+        ) from None
+    return factory()
+
+
 class RPCFleet:
     """Routes chunkset reads across RPC nodes and accounts serving metrics."""
 
