@@ -47,6 +47,14 @@ else
     echo "ruff not installed; lint gate skipped (enforced in GitHub Actions)"
 fi
 
+echo "== lint: simlint =="
+# determinism linter over the sim path (net/ storage/ core/ scenarios/):
+# exit 0 clean, 1 on new findings or stale baseline entries, 2 on internal
+# error — so CI distinguishes "gate found problems" from "gate is broken".
+# Stdlib-only (ast), so unlike ruff it always runs here.  Rule catalog and
+# the pragma/baseline workflow: docs/simlint.md
+python -m repro.analysis --check
+
 echo "== tier-1: pytest =="
 # test_distributed_equivalence_8dev needs jax.shard_map, absent from the
 # pinned jax in this image (fails at seed too) — deselected so the gate
@@ -74,6 +82,16 @@ python -m repro.scenarios budgets | while read -r name budget; do
     BACKBONE_SMOKE=1 run_budgeted "$budget" "scenario $name" \
         python -m repro.scenarios run "$name"
 done
+
+echo "== simsan smoke: background scenario under the sanitizer (budget: ${SIMSAN_BUDGET_S:-240}s) =="
+# re-run one full scenario with the event-loop sanitizer armed
+# (SHELBY_SIMSAN=1): pop-order audits, slot-leak detection at drain,
+# off-loop mutation guards, per-epoch payment conservation.  The sanitizer
+# only observes — the scenario's results (and its $BENCH_JSON section) are
+# byte-identical to the plain run above — so a nonzero exit here means a
+# real simulation-safety violation, not flake.
+SHELBY_SIMSAN=1 BACKBONE_SMOKE=1 run_budgeted "${SIMSAN_BUDGET_S:-240}" "simsan background" \
+    python -m repro.scenarios run background
 
 echo "== read-throughput smoke (budget: ${SMOKE_BUDGET_S:-600}s) =="
 BACKBONE_SMOKE=1 run_budgeted "${SMOKE_BUDGET_S:-600}" "read throughput" \

@@ -1,0 +1,9 @@
+"""Determinism tooling: ``simlint`` (static rules) + ``simsan`` (runtime
+sanitizer for the event loop).  CLI: ``python -m repro.analysis --check``.
+See ``docs/simlint.md`` for the rule catalog and workflow."""
+from repro.analysis.simlint import (  # noqa: F401
+    Finding, RULES, lint_paths, lint_source,
+)
+from repro.analysis.simsan import (  # noqa: F401
+    SanitizerError, check_payment_conservation,
+)

@@ -413,7 +413,7 @@ class ShelbyContract:
             sp: held_count.get(sp, 0) * p.rwd_st_per_chunk * scores[sp] for sp in sp_ids
         }
         auditor_rwd = {
-            auditor: p.rwd_au * sum(sum(v) for v in sb.bits.values())
+            auditor: p.rwd_au * sum(sum(v) for v in sb.bits.values())  # simlint: ok SIM007 integer bit counts, order-exact
             for auditor, sb in boards.items()
         }
         for sp, amt in storage_rwd.items():

@@ -136,4 +136,5 @@ class PaymentLedger:
         return tx
 
     def total_paid(self) -> float:
-        return sum(self.totals.values())
+        # sorted so the float sum is independent of channel insertion order
+        return sum(self.totals[k] for k in sorted(self.totals))

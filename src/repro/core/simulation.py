@@ -22,6 +22,7 @@ Nash equilibrium), Theorem 2 (mutual dishonesty is not), Theorem 3
 from __future__ import annotations
 
 import dataclasses
+import os
 
 import numpy as np
 
@@ -102,7 +103,10 @@ def run_sim(
     epoch_ms: float = 250.0,  # simulated wall span of one churned epoch
     das=None,  # storage.das.DASSpec: extend blobs + sample every epoch
     engine: str | None = None,  # event-queue discipline (calendar|heap)
+    sanitize: bool | None = None,  # simsan: per-epoch payment conservation
 ) -> SimResult:
+    if sanitize is None:
+        sanitize = bool(os.environ.get("SHELBY_SIMSAN"))
     params = params or AuditParams(p_a=0.5, auditors_per_audit=4, C=50, p_ata=0.3)
     layout = layout or BlobLayout(k=4, m=2, chunkset_bytes_target=64 * 1024)
     background = background or BackgroundSpec()
@@ -233,6 +237,15 @@ def run_sim(
 
         def respond_ata(auditor, auditee, pos):
             return sps[auditor].reproduce_proof(auditee, pos)
+
+        if sanitize:
+            # simsan: the settlement invariant (every channel debit backed
+            # by a receipt) must already hold at EVERY epoch boundary, not
+            # just at close() — catching the first epoch that breaks it
+            # names the plane that leaked value
+            from repro.analysis.simsan import check_payment_conservation
+            check_payment_conservation(client.current_session,
+                                       where=f"epoch {epoch}")
 
         last = contract.close_epoch(epoch, respond_storage, respond_ata)
         for i in sorted(sps):  # sps may have grown mid-epoch (joiners)

@@ -50,6 +50,8 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import itertools
+import os
+import sys
 import time
 from collections import deque
 from typing import Any, Callable, Generator
@@ -118,6 +120,28 @@ class Release:
     priority: int = 0
 
 
+def safe_release(effect: "Release") -> Generator:
+    """``yield from`` this inside a ``finally:`` block to give a slot back
+    on every *live* exit path — normal completion and thrown exceptions —
+    of a task's critical section::
+
+        yield Acquire(("sp", 3), slots)
+        try:
+            yield Sleep(service_ms)
+        finally:
+            yield from safe_release(Release(("sp", 3)))
+
+    During task *teardown* (``GeneratorExit`` — the generator of a
+    ``run_until`` straggler being garbage-collected, or an explicit
+    ``gen.close()``) it yields nothing: a closing generator may not yield
+    (``RuntimeError: generator ignored GeneratorExit``), and slot reclaim
+    for cancelled tasks is the engine's job (``TaskHandle.cancel``), so
+    yielding here would be both illegal and double-counted."""
+    if isinstance(sys.exc_info()[1], GeneratorExit):
+        return
+    yield effect
+
+
 @dataclasses.dataclass(frozen=True)
 class Join:
     """Wait for another task; resumes with its result or raises its error."""
@@ -138,6 +162,7 @@ class TaskHandle:
     __slots__ = (
         "gen", "label", "done", "result", "error", "error_delivered",
         "cancelled", "started_ms", "finished_ms", "_joiners",
+        "held", "_loop",
     )
 
     def __init__(self, gen: Generator, label: str, started_ms: float):
@@ -151,10 +176,21 @@ class TaskHandle:
         self.started_ms = started_ms
         self.finished_ms = float("nan")
         self._joiners: list["TaskHandle"] = []
+        # resource slots this task currently holds, as (key, priority,
+        # t_acquired) — lets cancel() give slots back and lets simsan name
+        # leak holders at drain
+        self.held: list[tuple[Any, int, float]] = []
+        self._loop: "EventLoop | None" = None
 
     def cancel(self) -> None:
-        """Drop the task: pending wakeups for it are skipped when popped."""
+        """Drop the task: pending wakeups for it are skipped when popped,
+        and any resource slots it still holds are released back to the
+        loop at the current sim time.  (The generator is abandoned, not
+        closed, so a `finally: yield Release` inside it can never run —
+        the engine must reclaim the slots itself or they leak.)"""
         self.cancelled = True
+        if self._loop is not None and not self.done and self.held:
+            self._loop._reclaim(self)
 
     def __repr__(self) -> str:  # debugging aid only
         state = "done" if self.done else ("cancelled" if self.cancelled else "live")
@@ -390,7 +426,7 @@ class EventLoop:
     ``(time, seq)`` order, so the choice never changes a digest."""
 
     def __init__(self, network=None, *, trace: bool = False,
-                 engine: str | None = None):
+                 engine: str | None = None, sanitize: bool | None = None):
         self.now = 0.0
         self.network = network
         self.engine = engine or DEFAULT_ENGINE
@@ -400,6 +436,18 @@ class EventLoop:
             self._q = _BinaryHeap()
         else:
             raise ValueError(f"engine must be calendar|heap, got {self.engine!r}")
+        # simsan: opt-in runtime sanitizer (pop-order audit, slot-leak and
+        # off-loop-mutation detection); SHELBY_SIMSAN=1 turns it on for
+        # every loop in the process.  None when off — the hot path pays
+        # one `is not None` test per hook.
+        if sanitize is None:
+            sanitize = bool(os.environ.get("SHELBY_SIMSAN"))
+        self.sanitize = sanitize
+        self._san = None
+        self._current: TaskHandle | None = None
+        if sanitize:
+            from repro.analysis.simsan import Sanitizer
+            self._san = Sanitizer(self)
         self._seq = itertools.count()
         self._resources: dict[Any, Resource] = {}
         self._tasks: list[TaskHandle] = []
@@ -421,8 +469,51 @@ class EventLoop:
     def resource(self, key: Any, capacity: int = 1) -> Resource:
         res = self._resources.get(key)
         if res is None:
-            res = self._resources[key] = Resource(key, capacity)
+            if self._san is not None:
+                from repro.analysis.simsan import GuardedResource
+                res = GuardedResource(key, capacity, self._san)
+            else:
+                res = Resource(key, capacity)
+            self._resources[key] = res
         return res
+
+    def _reclaim(self, h: TaskHandle) -> None:
+        """Release every slot a cancelled task still holds (at ``now``)."""
+        while h.held:
+            key, priority, _t_acq = h.held[0]
+            self._do_release(key, priority, holder=h)
+
+    def _do_release(self, key: Any, priority: int, *,
+                    holder: TaskHandle | None = None) -> None:
+        """Give one slot of ``key`` back and wake the best eligible waiter
+        at the current time — the shared path under a task's ``Release``
+        effect and ``TaskHandle.cancel``'s slot reclaim."""
+        res = self.resource(key)
+        if holder is not None:
+            for i, (k, p, _t) in enumerate(holder.held):
+                if k == key and p == priority:
+                    del holder.held[i]
+                    break
+        san = self._san
+        if san is not None:
+            san.on_touch(res, holder)
+            san.on_release(res, priority, holder)
+            with san.engine_op():
+                self._release_inner(res, priority)
+            san.record(res, holder)
+        else:
+            self._release_inner(res, priority)
+
+    def _release_inner(self, res: Resource, priority: int) -> None:
+        res.in_use -= 1
+        held = res.in_use_by_class.get(priority, 0)
+        res.in_use_by_class[priority] = max(0, held - 1)
+        woken = res.pop_eligible()
+        if woken is not None:
+            prio, w, t0 = woken
+            res.grant(prio, waited_ms=self.now - t0)
+            w.held.append((res.key, prio, self.now))
+            self._push(self.now, w, ("resume", None))
 
     # -- task lifecycle ------------------------------------------------------------
     def spawn(self, gen: Generator, at_ms: float | None = None,
@@ -431,11 +522,14 @@ class EventLoop:
         the current time).  Returns a handle usable with ``Join``."""
         t = self.now if at_ms is None else at_ms
         h = TaskHandle(gen, label or f"task{len(self._tasks)}", t)
+        h._loop = self
         self._tasks.append(h)
         self._push(t, h, ("resume", None))
         return h
 
     def _push(self, t_ms: float, handle: TaskHandle, action: tuple[str, Any]) -> None:
+        if self._san is not None:
+            self._san.on_push(t_ms, handle)
         self._q.push((t_ms, next(self._seq), handle, action))
 
     def _finish(self, h: TaskHandle, *, result: Any = None,
@@ -455,21 +549,33 @@ class EventLoop:
             self._failures.append(h)
 
     def _step(self) -> None:
-        t, _, h, (kind, value) = self._q.pop()
+        t, seq, h, (kind, value) = self._q.pop()
         self.events_processed += 1
         self.now = t
+        if self._san is not None:
+            self._san.on_pop(t, seq)
         if h.cancelled or h.done:
             return
         if self.trace is not None:
             self.trace.append((t, h.label, kind))
+        self._current = h
         try:
             effect = h.gen.throw(value) if kind == "throw" else h.gen.send(value)
         except StopIteration as stop:
             self._finish(h, result=stop.value)
             return
+        except (GeneratorExit, KeyboardInterrupt):
+            # control-flow signals are never a task *result*: recording them
+            # as task errors would hand teardown/interrupt to a Join'er
+            # instead of the driver.  (BaseException subclasses would skip
+            # the Exception clause below anyway — this clause states the
+            # intent and keeps it true if the hierarchy ever shifts.)
+            raise
         except Exception as err:
             self._finish(h, error=err)
             return
+        finally:
+            self._current = None
         self._dispatch(h, effect)
 
     def _dispatch(self, h: TaskHandle, effect: Any) -> None:
@@ -485,21 +591,24 @@ class EventLoop:
             self._push(arrival, h, ("resume", arrival))
         elif isinstance(effect, Acquire):
             res = self.resource(effect.resource, effect.capacity)
-            if res.can_grant(effect.priority, effect.limit):
+            if self._san is not None:
+                self._san.on_touch(res, h)
+                with self._san.engine_op():
+                    if res.can_grant(effect.priority, effect.limit):
+                        res.grant(effect.priority)
+                        h.held.append((res.key, effect.priority, self.now))
+                        self._push(self.now, h, ("resume", None))
+                    else:
+                        res.enqueue(effect.priority, h, self.now, effect.limit)
+                self._san.record(res, h)
+            elif res.can_grant(effect.priority, effect.limit):
                 res.grant(effect.priority)
+                h.held.append((res.key, effect.priority, self.now))
                 self._push(self.now, h, ("resume", None))
             else:
                 res.enqueue(effect.priority, h, self.now, effect.limit)
         elif isinstance(effect, Release):
-            res = self.resource(effect.resource)
-            res.in_use -= 1
-            held = res.in_use_by_class.get(effect.priority, 0)
-            res.in_use_by_class[effect.priority] = max(0, held - 1)
-            woken = res.pop_eligible()
-            if woken is not None:
-                prio, w, t0 = woken
-                res.grant(prio, waited_ms=self.now - t0)
-                self._push(self.now, w, ("resume", None))
+            self._do_release(effect.resource, effect.priority, holder=h)
             self._push(self.now, h, ("resume", None))
         elif isinstance(effect, Join):
             child = effect.handle
@@ -528,12 +637,14 @@ class EventLoop:
         Raises the first exception of any task whose error was never
         delivered to a joiner, and flags deadlocks (tasks left suspended on
         a Join/Recv/Acquire that can never fire)."""
-        events0, t0 = self.events_processed, time.perf_counter()
+        # wall-clock here is engine telemetry (events/sec); it never feeds
+        # back into simulated behaviour
+        events0, t0 = self.events_processed, time.perf_counter()  # simlint: ok SIM001 engine wall telemetry only
         try:
             while self._q:
                 self._step()
         finally:
-            dt = time.perf_counter() - t0
+            dt = time.perf_counter() - t0  # simlint: ok SIM001 engine wall telemetry only
             self.wall_s += dt
             ENGINE_COUNTERS["wall_s"] += dt
             ENGINE_COUNTERS["events"] += self.events_processed - events0
@@ -546,6 +657,11 @@ class EventLoop:
             raise RuntimeError(
                 f"event loop drained with {len(stuck)} task(s) still "
                 f"suspended (deadlock?): {names}")
+        if self._san is not None:
+            # a full drain must leave every resource slot returned; this is
+            # deliberately NOT checked in run_until, which abandons
+            # stragglers like a real client dropping in-flight RPCs
+            self._san.on_drain()
         return self.now
 
     def run_until(self, handle: TaskHandle) -> Any:
@@ -553,12 +669,12 @@ class EventLoop:
         raises its error).  Later events — e.g. straggler responses the
         caller stopped caring about — stay unprocessed, exactly like a real
         client abandoning in-flight RPCs."""
-        events0, t0 = self.events_processed, time.perf_counter()
+        events0, t0 = self.events_processed, time.perf_counter()  # simlint: ok SIM001 engine wall telemetry only
         try:
             while not handle.done and self._q:
                 self._step()
         finally:
-            dt = time.perf_counter() - t0
+            dt = time.perf_counter() - t0  # simlint: ok SIM001 engine wall telemetry only
             self.wall_s += dt
             ENGINE_COUNTERS["wall_s"] += dt
             ENGINE_COUNTERS["events"] += self.events_processed - events0

@@ -138,7 +138,7 @@ def replay_open_loop_fast(
     ``ReplayResult.cohort`` carries the split plus the per-leg (request,
     node) attribution that batched settlement consumes.
     """
-    t_wall0 = time.perf_counter()
+    t_wall0 = time.perf_counter()  # simlint: ok SIM001 engine wall telemetry only
     n = len(batch)
     reason = fastpath_fallback_reason(fleet, batch)
     if reason is not None or n == 0:
@@ -335,7 +335,7 @@ def replay_open_loop_fast(
     link = dict(fleet.network.link_bytes) if fleet.network is not None else {}
     # a vectorized completion counts as one engine event: the batch retired
     # n_vec requests that task mode would each have popped several events for
-    elapsed = time.perf_counter() - t_wall0
+    elapsed = time.perf_counter() - t_wall0  # simlint: ok SIM001 engine wall telemetry only
     ENGINE_COUNTERS["events"] += n_vec
     ENGINE_COUNTERS["wall_s"] += elapsed - loop.wall_s
     return ReplayResult(

@@ -302,6 +302,10 @@ class RPCFleet:
         for i, h in handles.items():
             try:
                 out, stats, srv, extra = yield Join(h)
+            except (GeneratorExit, KeyboardInterrupt):
+                # task teardown / user interrupt must never be harvested as
+                # a leg failure — propagate immediately
+                raise
             except Exception as e:  # harvest every node leg before raising
                 if first_err is None:
                     first_err = e

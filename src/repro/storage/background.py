@@ -30,7 +30,9 @@ foreground AND background schedule" is testable.
 """
 from __future__ import annotations
 
-from repro.net.events import Acquire, EventLoop, Join, Release, Sleep, Transfer
+from repro.net.events import (
+    Acquire, EventLoop, Join, Release, Sleep, Transfer, safe_release,
+)
 from repro.net.workloads import BackgroundRecord
 from repro.storage.repair import RepairCoordinator, RepairError
 from repro.storage.rpc import NACK_BYTES
@@ -83,8 +85,11 @@ class AuditPlane:
             prio = sp.service.background.priority
             yield Acquire(("sp", ch.auditee), sp.service.slots, priority=prio,
                           limit=sp.bg_slots())
-            yield Sleep(sp.audit_service_ms())
-            yield Release(("sp", ch.auditee), priority=prio)
+            try:
+                yield Sleep(sp.audit_service_ms())
+            finally:
+                yield from safe_release(
+                    Release(("sp", ch.auditee), priority=prio))
             proof = sp.respond_challenge(ch)
         payload = (
             len(proof.sample) + proof.proof.nbytes + PROOF_OVERHEAD_BYTES

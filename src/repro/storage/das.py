@@ -88,7 +88,8 @@ class SampleReceipt:
 
     @property
     def total_paid(self) -> float:
-        return sum(self.payments.values())
+        # sorted so the float sum is independent of dict insertion order
+        return sum(self.payments[k] for k in sorted(self.payments))
 
 
 @dataclasses.dataclass(frozen=True)

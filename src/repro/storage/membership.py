@@ -479,7 +479,7 @@ def measure_durability(
                 plane.repair.spawn(loop)
             loop.run()
             lost += plane.lost_chunksets
-            chunksets += sum(m.num_chunksets for m in contract.blobs.values())
+            chunksets += sum(m.num_chunksets for m in contract.blobs.values())  # simlint: ok SIM007 integer chunkset counts, order-exact
         points.append(durability.ChurnPoint(
             churn_rate=float(rate),
             epochs=epochs,

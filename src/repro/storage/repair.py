@@ -42,7 +42,9 @@ import numpy as np
 
 from repro.core import commitments as cm
 from repro.core.contract import ShelbyContract
-from repro.net.events import Acquire, EventLoop, Join, Release, Sleep, Transfer
+from repro.net.events import (
+    Acquire, EventLoop, Join, Release, Sleep, Transfer, safe_release,
+)
 from repro.storage.blob import BlobLayout
 from repro.storage.rpc import NACK_BYTES, REQUEST_BYTES
 from repro.storage.sp import StorageProvider
@@ -232,8 +234,10 @@ class RepairCoordinator:
         prio = sp.service.background.priority
         yield Acquire(("sp", sp_id), sp.service.slots, priority=prio,
                       limit=sp.bg_slots())
-        yield Sleep(sp.service_ms())
-        yield Release(("sp", sp_id), priority=prio)
+        try:
+            yield Sleep(sp.service_ms())
+        finally:
+            yield from safe_release(Release(("sp", sp_id), priority=prio))
         if networked:
             yield Transfer(node, self.coordinator_node, data.nbytes)
         return data
@@ -327,8 +331,10 @@ class RepairCoordinator:
         prio = dst_sp.service.background.priority
         yield Acquire(("sp", new_sp), dst_sp.service.slots, priority=prio,
                       limit=dst_sp.bg_slots())
-        yield Sleep(dst_sp.service_ms())
-        yield Release(("sp", new_sp), priority=prio)
+        try:
+            yield Sleep(dst_sp.service_ms())
+        finally:
+            yield from safe_release(Release(("sp", new_sp), priority=prio))
         dst_sp.store_chunk(blob_id, chunkset, chunk, repaired)
 
         report = RepairReport(blob_id, chunkset, chunk, mode, bytes_read,

@@ -55,6 +55,7 @@ from repro.net.events import (
     EventLoop,
     Join,
     Release,
+    safe_release,
     SingleFlight,
     Sleep,
     Transfer,
@@ -207,8 +208,10 @@ class DirectTransport:
             return None
         data, service_ms = resp
         yield Acquire(("sp", sp_id), sp.service.slots)
-        yield Sleep(service_ms)
-        yield Release(("sp", sp_id))
+        try:
+            yield Sleep(service_ms)
+        finally:
+            yield from safe_release(Release(("sp", sp_id)))
         return data
 
     def das_request_task(self, sp_id: int, blob_id: int, row: int, col: int):
@@ -220,8 +223,10 @@ class DirectTransport:
             return None
         share, proof, service_ms = resp
         yield Acquire(("sp", sp_id), sp.service.slots)
-        yield Sleep(service_ms)
-        yield Release(("sp", sp_id))
+        try:
+            yield Sleep(service_ms)
+        finally:
+            yield from safe_release(Release(("sp", sp_id)))
         return share, proof
 
 
@@ -265,8 +270,10 @@ class BackboneTransport:
             return None
         data, service_ms = resp
         yield Acquire(("sp", sp_id), sp.service.slots)
-        yield Sleep(service_ms)
-        yield Release(("sp", sp_id))
+        try:
+            yield Sleep(service_ms)
+        finally:
+            yield from safe_release(Release(("sp", sp_id)))
         yield Transfer(node, self.rpc_node, data.nbytes)
         return data
 
@@ -283,8 +290,10 @@ class BackboneTransport:
             return None
         share, proof, service_ms = resp
         yield Acquire(("sp", sp_id), sp.service.slots)
-        yield Sleep(service_ms)
-        yield Release(("sp", sp_id))
+        try:
+            yield Sleep(service_ms)
+        finally:
+            yield from safe_release(Release(("sp", sp_id)))
         yield Transfer(node, self.rpc_node, share.nbytes + proof.nbytes)
         return share, proof
 
@@ -665,6 +674,10 @@ class RPCNode:
         for key, h, leader in pending:
             try:
                 res = yield Join(h)
+            except (GeneratorExit, KeyboardInterrupt):
+                # task teardown / user interrupt must never be harvested as
+                # a child failure — propagate immediately
+                raise
             except Exception as e:  # harvest every child before propagating
                 if first_err is None:
                     first_err = e

@@ -89,7 +89,8 @@ class ReadReceipt:
 
     @property
     def total_paid(self) -> float:
-        return sum(self.payments.values())
+        # sorted so the float sum is independent of dict insertion order
+        return sum(self.payments[k] for k in sorted(self.payments))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -121,7 +122,8 @@ class ReceiptBatch:
 
     @property
     def total_paid(self) -> float:
-        return float(sum(self.paid_by_node.values()))
+        # sorted so the float sum is independent of dict insertion order
+        return float(sum(self.paid_by_node[k] for k in sorted(self.paid_by_node)))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -143,15 +145,16 @@ class SessionSettlement:
 
     @property
     def total_deposited(self) -> float:
-        return sum(self.deposits.values())
+        # sorted so these float sums are independent of dict insertion order
+        return sum(self.deposits[k] for k in sorted(self.deposits))
 
     @property
     def total_refunded(self) -> float:
-        return sum(self.client_refunds.values())
+        return sum(self.client_refunds[k] for k in sorted(self.client_refunds))
 
     @property
     def total_node_income(self) -> float:
-        return sum(self.node_income.values())
+        return sum(self.node_income[k] for k in sorted(self.node_income))
 
 
 class ShelbySession:
@@ -182,7 +185,8 @@ class ShelbySession:
 
     @property
     def total_paid(self) -> float:
-        return sum(ch.paid for ch in self.channels.values())
+        # sorted so the float sum is independent of channel open order
+        return sum(self.channels[k].paid for k in sorted(self.channels))
 
     # -- reads (pay on delivery) ---------------------------------------------------
     def _settle_check(self):
@@ -194,7 +198,7 @@ class ShelbySession:
         """Pay on delivery for one ServedRange and record its receipt: the
         bytes are in hand, split the per-byte fee across serving nodes in
         proportion to chunksets served."""
-        total_cs = sum(sr.chunksets_by_node.values())
+        total_cs = sum(sr.chunksets_by_node.values())  # simlint: ok SIM007 integer chunkset counts, order-exact
         payments: dict[str, float] = {}
         for rpc_id, count in sr.chunksets_by_node.items():
             amount = max(
@@ -535,8 +539,10 @@ class ShelbySession:
             incomes[rpc_id] = server_gets
             self._fleet.node(rpc_id).serving_income += server_gets
         # conservation: deposits fully split between refunds and income …
-        total_dep = sum(deposits.values())
-        total_out = sum(refunds.values()) + sum(incomes.values())
+        # (sorted sums: the check must not depend on channel-open order)
+        total_dep = sum(deposits[k] for k in sorted(deposits))
+        total_out = (sum(refunds[k] for k in sorted(refunds))
+                     + sum(incomes[k] for k in sorted(incomes)))
         if abs(total_dep - total_out) > 1e-6 * max(total_dep, 1.0):
             raise SettlementError(
                 f"conservation violated: deposits {total_dep} != "
